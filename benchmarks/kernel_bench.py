@@ -1,0 +1,62 @@
+"""Pallas kernel structural benchmarks (no TPU in this container — metrics
+are derived from the kernel's tiling, per the dry-run profiling approach):
+
+  * VMEM working set per grid step (must fit ~16 MiB v5e VMEM),
+  * arithmetic intensity of the block (FLOPs / HBM bytes moved),
+  * MXU alignment of the contraction/lane dims (multiples of 128),
+  * what the kernel buys vs the XLA-lowered reference.
+"""
+from __future__ import annotations
+
+VMEM_LIMIT = 16 * 2**20
+
+
+def _row(name: str, vmem: int, flops: float, hbm: float, aligned: bool,
+         note: str) -> str:
+    ai = flops / hbm if hbm else 0.0
+    return (
+        f"kernel.{name},,vmem_kib={vmem//1024};fits={int(vmem < VMEM_LIMIT)};"
+        f"arith_intensity={ai:.1f};mxu_aligned={int(aligned)};{note}"
+    )
+
+
+def run() -> list[str]:
+    rows = []
+
+    # flash attention: block (bq=128, bk=128), hd up to 256
+    for hd in (64, 128, 256):
+        bq = bk = 128
+        vmem = 4 * (bq * hd + 2 * bk * hd + bq * bk) + 4 * (2 * bq + bq * hd)
+        flops = 2 * bq * bk * hd * 2  # qk + pv
+        hbm = 2 * (bq * hd + 2 * bk * hd + bq * hd)  # bf16 in/out per step
+        rows.append(_row(
+            f"flash_attention_hd{hd}", vmem, flops, hbm,
+            aligned=(bq % 128 == 0 and bk % 128 == 0),
+            note="ref_materializes=score_tile_in_hbm",
+        ))
+
+    # gemm int8: (128,128,512) tiles
+    bm, bn, bk = 128, 128, 512
+    vmem = bm * bk + bk * bn + 4 * bm * bn + 4 * bn
+    flops = 2 * bm * bn * bk
+    hbm = bm * bk + bk * bn + bm * bn
+    rows.append(_row("gemm_int8_128x128x512", vmem, flops, hbm,
+                     aligned=True, note="epilogue=bias+po2shift+residual+relu"))
+
+    # ssd scan: chunk 128, N=64, P=64..128
+    for P in (64, 128):
+        ch, N = 128, 64
+        vmem = 4 * (ch * P + 2 * ch * N + ch * ch + N * P + ch)
+        flops = 2 * ch * ch * N + 2 * ch * ch * P + 2 * ch * N * P * 2
+        hbm = 4 * (ch * P + 2 * ch * N + ch * P)
+        rows.append(_row(f"ssd_scan_P{P}", vmem, flops, hbm, aligned=(P % 64 == 0),
+                         note="L_matrix=vmem_only(ref_puts_it_in_hbm)"))
+
+    # rwkv6: chunk 64, P=64
+    ch, P = 64, 64
+    vmem = 4 * (4 * ch * P + P * P + P)
+    flops = ch * (2 * P * P * 3)
+    hbm = 4 * (4 * ch * P + ch * P)
+    rows.append(_row("rwkv6_chunk64", vmem, flops, hbm, aligned=True,
+                     note="state_resident_across_chunks"))
+    return rows

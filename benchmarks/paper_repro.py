@@ -1,0 +1,248 @@
+"""Paper-reproduction benchmarks: one function per table/figure.
+
+  fig2c_isu_latency    -- Fig. 2(c): PU-to-PU control-token latency matrix
+  fig3_two_pu_pipeline -- Fig. 3: balanced / consumer-limited / producer-
+                          limited pipeline cases on the simulator
+  fig6a_single_batch   -- Fig. 6(a): 35 single-batch configs + Pareto front
+  fig6b_multi_batch    -- Fig. 6(b): hybrid multi-batch schedules + DP-A/B/C
+  table3_comparison    -- Table III: our design points vs prior accelerators
+  simulated_design_points -- DP-A/B/C executed on the discrete-event
+                          simulator (not just the analytic model)
+"""
+from __future__ import annotations
+
+import time
+
+from repro.compiler import compile_model, zoo
+from repro.core import Group, MultiPUSimulator, latency_matrix, make_u50_system, simulate
+from repro.core.demo import GemmShape, build_two_pu_pipeline
+from repro.dse import explore
+
+GOPS_224EQ_PER_FRAME = 7.72  # canonical ResNet-50 GOPs (224x224, Table III)
+SYSTEM_PEAK_TOPS = 4.608
+
+
+def _gopf(g) -> float:
+    return 2 * g.total_macs() / 1e9
+
+
+def fig2c_isu_latency() -> list[str]:
+    pus = make_u50_system()
+    mat = latency_matrix(pus)
+    rows = ["fig2c.header," + ",".join(f"PU{p.pid}" for p in pus)]
+    for p, row in zip(pus, mat):
+        rows.append(f"fig2c.PU{p.pid}," + ",".join(str(c) for c in row))
+    same_slr = [mat[i][j] for i in range(10) for j in range(10)
+                if i != j and pus[i].slr == pus[j].slr]
+    cross = [mat[i][j] for i in range(10) for j in range(10) if pus[i].slr != pus[j].slr]
+    rows.append(f"fig2c.summary,same_pu=2,same_slr={min(same_slr)}-{max(same_slr)},"
+                f"cross_slr={min(cross)}-{max(cross)}")
+    return rows
+
+
+def fig3_two_pu_pipeline() -> list[str]:
+    shape = GemmShape(m=64, n=1024, k=576)
+    big = GemmShape(m=64, n=2048, k=576)
+    cases = {
+        "case1_balanced": (0, 1, shape, shape),
+        "case2_consumer_limited": (0, 1, shape, big),
+        "case3_producer_limited": (0, 1, big, shape),
+        "heterogeneous_1x_2x": (0, 5, shape, big),
+    }
+    rows = []
+    for name, (pa, pb, sa, sb) in cases.items():
+        sim = MultiPUSimulator()
+        t0 = time.perf_counter()
+        res = sim.run(build_two_pu_pipeline(pa, pb, sa, sb, rounds=12))
+        wall_us = (time.perf_counter() - t0) * 1e6
+        fps = res.throughput_fps(warmup=3)
+        st_wait = res.pu_stats[pa][Group.ST].sync_wait / res.end_cycles
+        ld_wait = res.pu_stats[pb][Group.LD].sync_wait / res.end_cycles
+        rows.append(
+            f"fig3.{name},{wall_us:.0f},fps={fps:.1f};tokens={res.tokens_sent};"
+            f"prod_st_wait={st_wait:.2f};cons_ld_wait={ld_wait:.2f}"
+        )
+    return rows
+
+
+def fig6a_single_batch(dse=None) -> list[str]:
+    g = zoo.resnet50(256)
+    dse = dse or explore(g)
+    gopf = _gopf(g)
+    frontier = {p.config for p in dse.single_frontier}
+    rows = []
+    for p in sorted(dse.single, key=lambda p: (p.a, p.b)):
+        rows.append(
+            f"fig6a.cfg_{p.a}_{p.b},,fps224eq={p.fps * gopf / GOPS_224EQ_PER_FRAME:.1f};"
+            f"latency_ms={p.latency*1e3:.2f};tops={p.tops:.3f};pbe={p.pbe:.3f};"
+            f"pareto={int(p.config in frontier)}"
+        )
+    return rows
+
+
+def fig6b_multi_batch(dse=None) -> list[str]:
+    g = zoo.resnet50(256)
+    dse = dse or explore(g, tolerance=0.01)
+    gopf = _gopf(g)
+    rows = [f"fig6b.schedules,,count={len(dse.multi)};frontier={len(dse.multi_frontier)}"]
+    for name, dp in (("DP-A", dse.dp_a), ("DP-B", dse.dp_b), ("DP-C", dse.dp_c)):
+        thr = getattr(dp, "throughput", None) or dp.fps
+        batch = getattr(dp, "batch", 1)
+        cfg = getattr(dp, "configs", None) or [dp.config]
+        gops = thr * gopf
+        rows.append(
+            f"fig6b.{name},,batch={batch};thr_fps224eq={gops / GOPS_224EQ_PER_FRAME:.1f};"
+            f"latency_ms={dp.latency*1e3:.2f};gops={gops:.0f};ce={gops/ (SYSTEM_PEAK_TOPS*1e3):.3f};"
+            f"configs={'+'.join(f'{a}x1_{b}x2' for a, b in cfg)}"
+        )
+    return rows
+
+
+# Table III prior-work rows (FPS/TOPS and GOPS/W taken from the paper) for
+# the ratio claims: 1.0-2.7x FPS/TOPS, CE 1.0-1.9x.
+PRIOR_WORKS = {
+    "DPU_XCU50": dict(fps_per_tops=77.7, ce=0.598),
+    "ShortcutFuse": dict(fps_per_tops=47.7, ce=0.561),
+    "FullStack": dict(fps_per_tops=120.4, ce=0.927),
+    "Rotated": dict(fps_per_tops=94.6, ce=0.732),
+    "xDNN": dict(fps_per_tops=65.2, ce=0.502),
+    "UnifiedAcc": dict(fps_per_tops=93.0, ce=0.720),
+    "Amoeba": dict(fps_per_tops=87.2, ce=0.699),
+    "DCP": dict(fps_per_tops=126.9, ce=0.977),
+}
+
+
+def table3_comparison(dse=None) -> list[str]:
+    g = zoo.resnet50(256)
+    dse = dse or explore(g)
+    gopf = _gopf(g)
+    rows = []
+    points = {
+        "DP-A": (dse.dp_a.fps, dse.dp_a.latency, 1),
+        "DP-B": (dse.dp_b.throughput, dse.dp_b.latency, dse.dp_b.batch),
+        "DP-C": (dse.dp_c.throughput, dse.dp_c.latency, dse.dp_c.batch),
+    }
+    for name, (thr, lat, batch) in points.items():
+        gops = thr * gopf
+        fps224 = gops / GOPS_224EQ_PER_FRAME
+        fps_per_tops = fps224 / SYSTEM_PEAK_TOPS
+        ce = gops / (SYSTEM_PEAK_TOPS * 1e3)
+        gops_per_dsp = gops / 3860.0
+        rows.append(
+            f"table3.{name},,batch={batch};latency_ms={lat*1e3:.2f};fps={fps224:.1f};"
+            f"gops={gops:.0f};ce={ce:.3f};gops_per_dsp={gops_per_dsp:.2f};"
+            f"fps_per_tops={fps_per_tops:.1f}"
+        )
+    # headline ratios for DP-B (the paper's focus configuration)
+    thr, _, _ = points["DP-B"]
+    fps_per_tops_b = thr * gopf / GOPS_224EQ_PER_FRAME / SYSTEM_PEAK_TOPS
+    ce_b = thr * gopf / (SYSTEM_PEAK_TOPS * 1e3)
+    r_min = min(fps_per_tops_b / w["fps_per_tops"] for w in PRIOR_WORKS.values())
+    r_max = max(fps_per_tops_b / w["fps_per_tops"] for w in PRIOR_WORKS.values())
+    c_min = min(ce_b / w["ce"] for w in PRIOR_WORKS.values())
+    c_max = max(ce_b / w["ce"] for w in PRIOR_WORKS.values())
+    rows.append(
+        f"table3.ratios_DPB,,fps_per_tops_gain={r_min:.2f}x-{r_max:.2f}x;"
+        f"ce_gain={c_min:.2f}x-{c_max:.2f}x (paper: 1.0x-2.7x, 1.0x-1.9x)"
+    )
+    return rows
+
+
+def simulated_design_points() -> list[str]:
+    """Execute DP-A / DP-B / DP-C instruction programs on the simulator."""
+    g = zoo.resnet50(256)
+    gopf = _gopf(g)
+    rows = []
+
+    def sim_single(a: int, b: int, label: str):
+        cm = compile_model(g, a, b, rounds=6)
+        last = max(s.index for s in cm.part.stages if s.nids)
+        t0 = time.perf_counter()
+        res = simulate(cm.programs, first_pid=cm.pid_map[0], last_pid=cm.pid_map[last])
+        wall_us = (time.perf_counter() - t0) * 1e6
+        fps = res.throughput_fps(warmup=2)
+        gops = fps * gopf
+        rows.append(
+            f"sim.{label},{wall_us:.0f},fps224eq={gops/GOPS_224EQ_PER_FRAME:.1f};"
+            f"gops={gops:.0f};ce={gops/(SYSTEM_PEAK_TOPS*1e3):.3f};"
+            f"latency_ms={res.latency_seconds()*1e3:.2f};deadlock={int(res.deadlocked)}"
+        )
+        return gops
+
+    sim_single(5, 5, "DP-A_pipeline_all")
+
+    # DP-B: hybrid schedule from the DSE — pipeline within each member,
+    # batch-level parallelism across members, disjoint PUs + channel pools.
+    dse = explore(g)
+    members_b = list(dse.dp_b.configs)
+    programs = []
+    exit_pid_of_member: list[int] = []
+    offsets = {"PU1x": 0, "PU2x": 0}
+    chan_next = 0
+    sim = MultiPUSimulator()
+    for a, b in members_b:
+        n_ch = min(32 - chan_next, max(3, 3 * (a + b)))
+        pool = list(range(chan_next, chan_next + n_ch))
+        chan_next += n_ch
+        cm = compile_model(g, a, b, rounds=5, pid_offset=dict(offsets), channel_pool=pool)
+        offsets["PU1x"] += a
+        offsets["PU2x"] += b
+        programs.extend(cm.programs)
+        last_stage = max(s.index for s in cm.part.stages if s.nids)
+        exit_pid_of_member.append(cm.pid_map[last_stage])
+    t0 = time.perf_counter()
+    res = sim.run(programs)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    total = 0.0
+    for pid in exit_pid_of_member:
+        ends = res.pu_stats[pid][Group.ST].round_end_times
+        if len(ends) > 2:
+            total += (len(ends) - 2) / ((ends[-1] - ends[1]) / 300e6)
+    gops = total * gopf
+    rows.append(
+        f"sim.DP-B_hybrid,{wall_us:.0f},batch={len(members_b)};"
+        f"fps224eq={gops/GOPS_224EQ_PER_FRAME:.1f};gops={gops:.0f};"
+        f"ce={gops/(SYSTEM_PEAK_TOPS*1e3):.3f};deadlock={int(res.deadlocked)}"
+    )
+
+    # DP-C: 10 concurrent single-PU pipelines on disjoint PUs, each member
+    # on a disjoint 3-channel HBM pool (weights + LD + ST).
+    programs = []
+    offsets = {"PU1x": 0, "PU2x": 0}
+    members = [(1, 0)] * 5 + [(0, 1)] * 5
+    sim = MultiPUSimulator()
+    for i, (a, b) in enumerate(members):
+        pool = [3 * i, 3 * i + 1, 3 * i + 2]
+        cm = compile_model(g, a, b, rounds=5, pid_offset=dict(offsets), channel_pool=pool)
+        offsets["PU1x"] += a
+        offsets["PU2x"] += b
+        programs.extend(cm.programs)
+    t0 = time.perf_counter()
+    res = sim.run(programs)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    # throughput: sum of per-PU ST round rates (steady state: skip round 1;
+    # the window ends[1]..ends[-1] contains len(ends)-2 completed intervals)
+    total = 0.0
+    for prog in programs:
+        ends = res.pu_stats[prog.pid][Group.ST].round_end_times
+        if len(ends) > 2:
+            total += (len(ends) - 2) / ((ends[-1] - ends[1]) / 300e6)
+    gops = total * gopf
+    rows.append(
+        f"sim.DP-C_10_independent,{wall_us:.0f},fps224eq={gops/GOPS_224EQ_PER_FRAME:.1f};"
+        f"gops={gops:.0f};ce={gops/(SYSTEM_PEAK_TOPS*1e3):.3f};deadlock={int(res.deadlocked)}"
+    )
+    return rows
+
+
+def run() -> list[str]:
+    out = []
+    g = zoo.resnet50(256)
+    dse = explore(g, tolerance=0.01)
+    out += fig2c_isu_latency()
+    out += fig3_two_pu_pipeline()
+    out += fig6a_single_batch(dse)
+    out += fig6b_multi_batch(dse)
+    out += table3_comparison(dse)
+    out += simulated_design_points()
+    return out

@@ -1,0 +1,61 @@
+"""Roofline table from the dry-run baseline (EXPERIMENTS.md section Roofline).
+
+Reads dryrun_baseline.json (written by repro.launch.dryrun --out) and prints
+the three per-chip roofline terms, the dominant bottleneck, and the
+MODEL_FLOPS / HLO_FLOPS "useful compute" ratio per (arch x shape x mesh).
+Falls back to a hint row if the dry-run artifact is absent.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+# prefer the post-§Perf artifacts; newest single-pod sweep overlays the
+# both-mesh run; fall back to the baseline
+CANDIDATES = [os.path.join(ROOT, "dryrun_optimized.json"),
+              os.path.join(ROOT, "dryrun_baseline.json")]
+BASELINE = next((c for c in CANDIDATES if os.path.exists(c)), CANDIDATES[-1])
+OVERLAY = os.path.join(ROOT, "dryrun_optimized_sp.json")
+
+
+def _load_cells() -> list:
+    with open(BASELINE) as f:
+        cells = json.load(f)
+    if os.path.exists(OVERLAY):
+        with open(OVERLAY) as f:
+            over = {(c["mesh"], c["arch"], c["shape"]): c for c in json.load(f)}
+        cells = [over.get((c["mesh"], c["arch"], c["shape"]), c) for c in cells]
+    return cells
+
+
+def run() -> list[str]:
+    if not os.path.exists(BASELINE):
+        return ["roofline.missing,,run `python -m repro.launch.dryrun --arch all "
+                "--both-meshes --out dryrun_baseline.json` first"]
+    cells = _load_cells()
+    rows = []
+    for c in cells:
+        key = f"roofline.{c['mesh']}.{c['arch']}.{c['shape']}"
+        if c["status"] == "skipped":
+            rows.append(f"{key},,SKIPPED({c['reason'][:60]})")
+            continue
+        if c["status"] == "error":
+            rows.append(f"{key},,ERROR({c['reason'][:80]})")
+            continue
+        rows.append(
+            f"{key},{c['compile_s']*1e6:.0f},"
+            f"t_compute_ms={c['t_compute']*1e3:.2f};"
+            f"t_memory_ms={c['t_memory']*1e3:.2f};"
+            f"t_collective_ms={c['t_collective']*1e3:.2f};"
+            f"bottleneck={c['bottleneck']};useful={c['useful_ratio']:.2f};"
+            f"args_gib={c['arg_bytes']/2**30:.2f};temp_gib={c['temp_bytes']/2**30:.2f}"
+        )
+    ok = [c for c in cells if c["status"] == "ok"]
+    if ok:
+        from collections import Counter
+        bn = Counter(c["bottleneck"] for c in ok)
+        rows.append(
+            f"roofline.summary,,cells_ok={len(ok)};bottlenecks={dict(bn)}"
+        )
+    return rows

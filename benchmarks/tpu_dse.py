@@ -1,0 +1,30 @@
+"""TPU-target DSE (the paper's Fig. 5 recipe over chip deployments):
+enumerate (stages x replicas x tensor) factorizations of a 256-chip pod per
+architecture, Pareto-filter, and report the paper's three canonical points
+(pure pipeline / best hybrid / pure batch)."""
+from __future__ import annotations
+
+from repro.configs import all_configs, get_config
+from repro.dse.tpu_deploy import explore_tpu
+
+ARCHS = ["qwen3-0.6b", "h2o-danube-3-4b", "starcoder2-15b", "internvl2-76b"]
+
+
+def run() -> list[str]:
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        points, frontier = explore_tpu(cfg, chips=256)
+        best = max(points, key=lambda p: p.throughput)
+        pure_pipe = max((p for p in points if p.replicas == 1),
+                        key=lambda p: p.throughput)
+        pure_batch = max((p for p in points if p.stages == 1),
+                         key=lambda p: p.throughput)
+        rows.append(
+            f"tpu_dse.{arch},,deployments={len(points)};frontier={len(frontier)};"
+            f"best={best.label}:{best.throughput:.0f}seq_s;"
+            f"pure_pipeline={pure_pipe.label}:{pure_pipe.throughput:.0f};"
+            f"pure_batch={pure_batch.label}:{pure_batch.throughput:.0f};"
+            f"hybrid_gain_vs_pipeline={best.throughput/pure_pipe.throughput:.2f}x"
+        )
+    return rows

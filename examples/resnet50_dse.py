@@ -1,0 +1,60 @@
+"""Design-space exploration on ResNet-50 (paper Sec. V-A, Figs. 5/6):
+enumerate 35 single-batch configs, compose hybrid multi-batch schedules,
+Pareto-filter, and print the DP-A/B/C design points with Table III metrics.
+
+    PYTHONPATH=src python examples/resnet50_dse.py [--max-latency-ms 20]
+"""
+import argparse
+
+from repro.compiler import zoo
+from repro.dse import constrained, explore
+
+GOPS_224EQ = 7.72
+PEAK_TOPS = 4.608
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-latency-ms", type=float, default=None)
+    ap.add_argument("--min-fps", type=float, default=None)
+    args = ap.parse_args()
+
+    g = zoo.resnet50(256)
+    gopf = 2 * g.total_macs() / 1e9
+    res = explore(g, tolerance=0.01)
+
+    print(f"step 1: {len(res.single)} single-batch configurations")
+    print(f"step 2: {len(res.multi)} multi-batch schedules")
+    print(f"step 3: Pareto frontier keeps {len(res.multi_frontier)}\n")
+
+    for name, dp in (("DP-A", res.dp_a), ("DP-B", res.dp_b), ("DP-C", res.dp_c)):
+        thr = getattr(dp, "throughput", None) or dp.fps
+        cfgs = getattr(dp, "configs", None) or [dp.config]
+        gops = thr * gopf
+        print(
+            f"{name}: batch={getattr(dp, 'batch', 1):2d}  "
+            f"fps(224eq)={gops/GOPS_224EQ:6.1f}  latency={dp.latency*1e3:5.2f} ms  "
+            f"CE={gops/(PEAK_TOPS*1e3):.3f}  "
+            f"configs={'+'.join(f'({a},{b})' for a, b in cfgs)}"
+        )
+
+    if args.max_latency_ms or args.min_fps:
+        lim = constrained(
+            res.multi,
+            max_latency=(args.max_latency_ms or 1e9) / 1e3,
+            min_throughput=(args.min_fps or 0.0) / (gopf / GOPS_224EQ),
+        )
+        best = max(lim, key=lambda s: s.throughput) if lim else None
+        print(f"\nconstrained pick ({len(lim)} feasible):", best and best.configs)
+
+    print("\nthroughput-latency frontier (multi-batch):")
+    for s in sorted(res.multi_frontier, key=lambda s: s.latency)[:12]:
+        gops = s.throughput * gopf
+        print(
+            f"  batch={s.batch:2d} fps={gops/GOPS_224EQ:6.1f} "
+            f"lat={s.latency*1e3:5.2f} ms tops={s.tops:.2f} pbe={s.system_pbe:.3f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""Top-level compilation driver: DNN graph -> executable PUPrograms.
+
+Chains the framework phases of Fig. 4: fusion -> parse/profile -> DP
+partitioning -> SMOF weight scheduling -> pipeline memory optimization ->
+instruction generation. The result carries both the instruction programs
+(executable on the discrete-event simulator) and the analytic performance
+model used by the DSE (Sec. V-A).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+from ..core.program import PUProgram
+from ..core.pu import PUSpec, make_u50_system
+from .fusion import fuse
+from .graph import Graph
+from .memory import MemoryPlan, assign_channels, buffer_requirements
+from .partition import Partition, partition
+from .profiler import profile_graph
+from .weights import WeightSchedule, schedule_weights
+
+
+@dataclass
+class CompiledModel:
+    graph: Graph  # fused graph
+    source_graph: Graph
+    part: Partition
+    mem: MemoryPlan
+    wscheds: dict[int, WeightSchedule]
+    programs: list[PUProgram]
+    pid_map: dict[int, int]
+    pu_specs: dict[int, PUSpec]
+    rounds: int
+    # analytic model
+    stage_times: dict[int, float]  # incl. weight-streaming stalls
+    n_pu1x: int = 0
+    n_pu2x: int = 0
+
+    # -- predicted performance (pre-simulation; the DSE cache) ---------------
+    @property
+    def predicted_round_time(self) -> float:
+        return max(self.stage_times.values()) if self.stage_times else 0.0
+
+    @property
+    def predicted_fps(self) -> float:
+        t = self.predicted_round_time
+        return 1.0 / t if t else 0.0
+
+    @property
+    def predicted_latency(self) -> float:
+        return sum(self.stage_times.values())
+
+    @property
+    def used_tops(self) -> float:
+        return sum(
+            self.pu_specs[self.pid_map[s.index]].peak_tops
+            for s in self.part.stages
+            if s.nids
+        )
+
+    def pbe(self) -> float:
+        caps = {"PU1x": 1.0, "PU2x": 2.0}
+        used = [s for s in self.part.stages if s.nids]
+        tmax = self.predicted_round_time
+        if not used or tmax == 0:
+            return 0.0
+        num = sum(self.stage_times[s.index] * caps[s.pu_kind] for s in used)
+        den = tmax * sum(caps[s.pu_kind] for s in used)
+        return num / den
+
+    def compute_efficiency(self, peak_tops: Optional[float] = None) -> float:
+        """CE = achieved GOPS / peak GOPS (of the PUs given; defaults to the
+        PUs used by this configuration)."""
+        peak = peak_tops if peak_tops is not None else self.used_tops
+        gops = 2.0 * self.graph.total_macs() * self.predicted_fps / 1e9
+        return gops / (peak * 1e3) if peak else 0.0
+
+
+def assign_pids(part: Partition, pus: list[PUSpec]) -> dict[int, int]:
+    """Map pipeline stages to physical PU ids by kind, in pipeline order."""
+    free = {"PU1x": [p.pid for p in pus if p.kind == "PU1x"],
+            "PU2x": [p.pid for p in pus if p.kind == "PU2x"]}
+    pid_map: dict[int, int] = {}
+    for s in part.stages:
+        if not s.nids:
+            continue
+        if not free[s.pu_kind]:
+            raise ValueError(f"no free {s.pu_kind} for stage {s.index}")
+        pid_map[s.index] = free[s.pu_kind].pop(0)
+    return pid_map
+
+
+def compile_model(
+    g: Graph,
+    n_pu1x: int,
+    n_pu2x: int,
+    *,
+    pus: Optional[list[PUSpec]] = None,
+    rounds: int = 16,
+    n_io: int = 4,
+    already_fused: bool = False,
+    pid_offset: dict[str, int] | None = None,
+    channel_pool: list[int] | None = None,
+) -> CompiledModel:
+    """Compile ``g`` for a (n_pu1x, n_pu2x) single-batch pipeline config.
+
+    ``pid_offset`` lets multi-batch deployments place this pipeline on a
+    disjoint PU subset (e.g. {"PU1x": 2, "PU2x": 0} starts at the 3rd PU1x);
+    ``channel_pool`` likewise gives it a disjoint HBM channel subset.
+    """
+    pus = pus if pus is not None else make_u50_system()
+    fused = g if already_fused else fuse(g)
+
+    kinds = {p.kind: p for p in pus}
+    profiles = profile_graph(fused, {k: kinds[k] for k in ("PU1x", "PU2x") if k in kinds})
+    part = partition(fused, profiles, n_pu1x, n_pu2x)
+
+    # Weight-transfer schedules + refined stage times (partitioning and
+    # weight scheduling are treated separately, as in the paper).
+    spec_of_kind = {p.kind: p for p in pus}
+    wscheds: dict[int, WeightSchedule] = {}
+    stage_times: dict[int, float] = {}
+    for s in part.stages:
+        if not s.nids:
+            continue
+        ws = schedule_weights(fused, list(s.nids), spec_of_kind[s.pu_kind])
+        wscheds[s.index] = ws
+        stage_times[s.index] = s.time + ws.total_stall()
+
+    plans = buffer_requirements(fused, part, n_io=n_io)
+    mem = assign_channels(fused, part, plans, profiles, channel_pool=channel_pool)
+
+    if pid_offset:
+        skip = dict(pid_offset)
+        pool = []
+        for p in pus:
+            if skip.get(p.kind, 0) > 0:
+                skip[p.kind] -= 1
+                continue
+            pool.append(p)
+    else:
+        pool = pus
+    pid_map = assign_pids(part, pool)
+    pu_specs = {p.pid: p for p in pus}
+
+    programs = generate = None
+    from .codegen import generate_programs
+
+    programs = generate_programs(
+        fused, part, mem, wscheds, pid_map, pu_specs, rounds=rounds
+    )
+
+    return CompiledModel(
+        graph=fused,
+        source_graph=g,
+        part=part,
+        mem=mem,
+        wscheds=wscheds,
+        programs=programs,
+        pid_map=pid_map,
+        pu_specs=pu_specs,
+        rounds=rounds,
+        stage_times=stage_times,
+        n_pu1x=n_pu1x,
+        n_pu2x=n_pu2x,
+    )

@@ -1,0 +1,123 @@
+"""Hardware-aware node fusion (paper Sec. IV-A, Fig. 4(b1)).
+
+Adapts the DNN graph to the PU dataflow capabilities while preserving
+computational correctness:
+
+  * Conv followed by element-wise Add fuses into FusedConvAdd(ReLU) — the PU
+    post-processing block supports residual shortcut additions in dataflow
+    (the *other* conv feeding the Add remains unchanged and its output
+    becomes the fused node's ``residual_input``).
+  * Activation functions (ReLU) integrate into the preceding compute node.
+
+The pass returns a new topologically-ordered Graph whose compute nodes map
+1:1 onto PU GEMM executions.
+"""
+from __future__ import annotations
+
+from .graph import Graph, Node, OpType
+
+
+def fuse(g: Graph) -> Graph:
+    """Apply ReLU-integration and Conv+Add(+ReLU) fusion."""
+    nodes = list(g.nodes)
+    consumed: set[int] = set()  # node ids folded into a fused node
+    # tensor id -> producing node (pre-fusion view)
+    producer = {tid: nd for nd in nodes for tid in nd.outputs}
+    # position of a tensor's production in the topological order
+    pos_of = {tid: i for i, nd in enumerate(nodes) for tid in nd.outputs}
+    for tid in g.input_tensors:
+        pos_of.setdefault(tid, -1)
+
+    def sole_consumer(tid: int) -> Node | None:
+        cons = [nd for nd in nodes if tid in nd.inputs and nd.nid not in consumed]
+        return cons[0] if len(cons) == 1 else None
+
+    out = Graph(name=g.name + ".fused")
+    out.tensors = dict(g.tensors)
+    out._next_tid = g._next_tid
+    out.input_tensors = list(g.input_tensors)
+    out.output_tensors = list(g.output_tensors)
+
+    # tensor rewiring: fused chains alias their intermediate tensors to the
+    # final output tensor of the chain.
+    alias: dict[int, int] = {}
+
+    def resolve(tid: int) -> int:
+        while tid in alias:
+            tid = alias[tid]
+        return tid
+
+    for nd in nodes:
+        if nd.nid in consumed:
+            continue
+        if nd.op in (OpType.CONV, OpType.FC):
+            op = nd.op
+            relu = nd.relu
+            residual = nd.residual_input
+            out_tid = nd.outputs[0]
+
+            # Conv -> Add fusion (residual shortcut executed in dataflow).
+            if op is OpType.CONV and residual is None:
+                nxt = sole_consumer(out_tid)
+                if nxt is not None and nxt.op is OpType.ADD:
+                    other = [t for t in nxt.inputs if t != out_tid]
+                    # The fused node must be the *latest* producer feeding the
+                    # Add: its residual input must already exist at this
+                    # topological position ("the other Conv layer remains
+                    # unchanged", Fig. 4(b1)).
+                    if len(other) == 1 and pos_of.get(other[0], 1 << 30) < pos_of[nd.outputs[0]]:
+                        residual = other[0]
+                        consumed.add(nxt.nid)
+                        out_tid = nxt.outputs[0]
+                        op = OpType.FUSED_CONV_ADD
+
+            # (Fused)Conv -> ReLU integration.
+            nxt = sole_consumer(out_tid)
+            if nxt is not None and nxt.op is OpType.RELU:
+                relu = True
+                consumed.add(nxt.nid)
+                out_tid = nxt.outputs[0]
+
+            if out_tid != nd.outputs[0]:
+                alias[nd.outputs[0]] = out_tid
+            new = out.add_node(
+                name=nd.name if op is nd.op else nd.name + "+add",
+                op=op,
+                inputs=[resolve(t) for t in nd.inputs],
+                outputs=[out_tid],
+                m=nd.m, n=nd.n, k=nd.k,
+                kernel=nd.kernel, stride=nd.stride, padding=nd.padding,
+                relu=relu,
+                residual_input=resolve(residual) if residual is not None else None,
+                scale_shift=nd.scale_shift,
+            )
+        elif nd.op is OpType.RELU:
+            # Standalone ReLU after a non-fusable producer (e.g. Add that
+            # could not fuse): keep as vector op.
+            new = out.add_node(
+                name=nd.name, op=nd.op,
+                inputs=[resolve(t) for t in nd.inputs],
+                outputs=list(nd.outputs),
+                m=nd.m, n=nd.n, k=nd.k,
+            )
+        elif nd.op is OpType.ADD:
+            # Unfused Add (both producers already consumed etc.) — vector op.
+            new = out.add_node(
+                name=nd.name, op=nd.op,
+                inputs=[resolve(t) for t in nd.inputs],
+                outputs=list(nd.outputs),
+                m=nd.m, n=nd.n, k=nd.k,
+            )
+        else:  # pools etc.
+            new = out.add_node(
+                name=nd.name, op=nd.op,
+                inputs=[resolve(t) for t in nd.inputs],
+                outputs=list(nd.outputs),
+                m=nd.m, n=nd.n, k=nd.k,
+                kernel=nd.kernel, stride=nd.stride, padding=nd.padding,
+            )
+
+    # Fix up graph outputs that were aliased into fused nodes.
+    out.output_tensors = [resolve(t) for t in out.output_tensors]
+    out.validate_topological()
+    return out

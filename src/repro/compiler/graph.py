@@ -1,0 +1,164 @@
+"""DNN graph IR for the compilation framework (paper Sec. IV, Fig. 4).
+
+The framework consumes quantized (INT8, power-of-two scales) DNN models. We
+use an ONNX-like node/tensor representation built directly in Python (the
+container has no onnx package; the IR mirrors the fields the paper's parser
+extracts: weights/bias dims, quantization scales, dependency structure,
+tensor identifiers).
+
+Operators cover the GEMM-based PU capabilities: Conv (lowered to GEMM via
+IM2COL), FC/GEMM, elementwise Add (residual), ReLU, pooling (executed in the
+PU vector units), plus structural ops handled at graph level.
+"""
+from __future__ import annotations
+
+import enum
+import math
+from dataclasses import dataclass, field, replace
+from typing import Iterable, Optional
+
+
+class OpType(enum.Enum):
+    CONV = "Conv"
+    FC = "Gemm"
+    ADD = "Add"
+    RELU = "Relu"
+    MAXPOOL = "MaxPool"
+    AVGPOOL = "GlobalAveragePool"
+    FUSED_CONV_ADD = "FusedConvAdd"  # Conv + residual Add (+ ReLU) in dataflow
+    INPUT = "Input"
+    OUTPUT = "Output"
+
+
+@dataclass(frozen=True)
+class TensorInfo:
+    """A tensor edge in the DAG (activation tensor, NCHW)."""
+
+    tid: int
+    name: str
+    shape: tuple[int, ...]  # (C, H, W) activation or (N,) flat
+    dtype_bytes: int = 1  # INT8
+
+    @property
+    def nbytes(self) -> int:
+        return int(math.prod(self.shape)) * self.dtype_bytes
+
+    @property
+    def nbytes_padded(self) -> int:
+        return (self.nbytes + 63) // 64 * 64  # 64B AXI-beat alignment
+
+
+@dataclass
+class Node:
+    """One DAG node. After fusion, a node maps to exactly one PU GEMM (or a
+    vector-unit op) — 'the nodes are partitioned into computational tiles
+    matching the first SA dimension of each mapped PU'."""
+
+    nid: int
+    name: str
+    op: OpType
+    inputs: list[int]  # tensor ids
+    outputs: list[int]
+    # GEMM view (for CONV/FC/FUSED_*): out = W[KxM]^T @ im2col(x)[KxN]
+    m: int = 0  # output channels
+    n: int = 0  # spatial positions (H_out * W_out) or batch rows
+    k: int = 0  # in_ch * kh * kw
+    # conv params
+    kernel: tuple[int, int] = (1, 1)
+    stride: tuple[int, int] = (1, 1)
+    padding: tuple[int, int] = (0, 0)
+    relu: bool = False
+    residual_input: Optional[int] = None  # tensor id of fused shortcut
+    scale_shift: int = 0  # po2 requant shift
+    attrs: dict = field(default_factory=dict)
+
+    @property
+    def macs(self) -> int:
+        if self.op in (OpType.CONV, OpType.FC, OpType.FUSED_CONV_ADD):
+            return self.m * self.n * self.k
+        return 0
+
+    @property
+    def weight_bytes(self) -> int:
+        """INT8 weights + INT32 bias footprint in URAM."""
+        if self.op in (OpType.CONV, OpType.FC, OpType.FUSED_CONV_ADD):
+            return self.m * self.k + 4 * self.m
+        return 0
+
+    @property
+    def is_compute(self) -> bool:
+        return self.op in (OpType.CONV, OpType.FC, OpType.FUSED_CONV_ADD,
+                           OpType.MAXPOOL, OpType.AVGPOOL)
+
+
+@dataclass
+class Graph:
+    """Node DAG + tensor table. Nodes are stored in topological order."""
+
+    name: str
+    nodes: list[Node] = field(default_factory=list)
+    tensors: dict[int, TensorInfo] = field(default_factory=dict)
+    input_tensors: list[int] = field(default_factory=list)
+    output_tensors: list[int] = field(default_factory=list)
+    _next_tid: int = 0
+    _next_nid: int = 0
+
+    # -- construction --------------------------------------------------------
+    def add_tensor(self, name: str, shape: tuple[int, ...], dtype_bytes: int = 1) -> TensorInfo:
+        t = TensorInfo(self._next_tid, name, tuple(shape), dtype_bytes)
+        self.tensors[t.tid] = t
+        self._next_tid += 1
+        return t
+
+    def add_node(self, **kw) -> Node:
+        node = Node(nid=self._next_nid, **kw)
+        self._next_nid += 1
+        self.nodes.append(node)
+        return node
+
+    # -- queries --------------------------------------------------------------
+    def producer_of(self, tid: int) -> Optional[Node]:
+        for nd in self.nodes:
+            if tid in nd.outputs:
+                return nd
+        return None
+
+    def consumers_of(self, tid: int) -> list[Node]:
+        out = [nd for nd in self.nodes if tid in nd.inputs]
+        out += [nd for nd in self.nodes if nd.residual_input == tid]
+        return out
+
+    def node_by_id(self, nid: int) -> Node:
+        for nd in self.nodes:
+            if nd.nid == nid:
+                return nd
+        raise KeyError(nid)
+
+    def compute_nodes(self) -> list[Node]:
+        return [nd for nd in self.nodes if nd.is_compute]
+
+    def total_macs(self) -> int:
+        return sum(nd.macs for nd in self.nodes)
+
+    def total_weight_bytes(self) -> int:
+        return sum(nd.weight_bytes for nd in self.nodes)
+
+    def validate_topological(self) -> None:
+        """Nodes must be topologically ordered over tensor dependencies."""
+        produced: set[int] = set(self.input_tensors)
+        for nd in self.nodes:
+            needs = list(nd.inputs) + ([nd.residual_input] if nd.residual_input is not None else [])
+            for tid in needs:
+                if tid not in produced:
+                    raise ValueError(
+                        f"node {nd.name} consumes tensor {tid} before production"
+                    )
+            produced.update(nd.outputs)
+
+    def summary(self) -> str:
+        gmacs = self.total_macs() / 1e9
+        wmb = self.total_weight_bytes() / 1e6
+        return (
+            f"Graph {self.name}: {len(self.nodes)} nodes, "
+            f"{gmacs:.2f} GMACs ({2*gmacs:.2f} GOPs), {wmb:.1f} MB weights"
+        )

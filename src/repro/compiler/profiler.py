@@ -1,0 +1,60 @@
+"""Node execution-time profiling (paper Sec. IV-A, Fig. 4(c)).
+
+Profiles each node under *conflict-free* conditions — weights preloaded in
+URAMs, dedicated HBM channels — measuring complete node processing: activation
+fetch from HBM, SA computation, output storage. With tile-grained streaming
+the PU overlaps these, so the steady-state node time is
+
+    t_node = max(t_compute, t_load, t_store, t_residual) + decode overhead
+
+Profiles are computed per PU *type* (PU1x / PU2x); weight-streaming stalls are
+handled separately by ``repro.compiler.weights`` (Sec. IV-B).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..core.pu import PUSpec
+from .graph import Graph, Node, OpType
+
+DECODE_OVERHEAD_S = 8 / 300e6  # a few sys_clk cycles of instruction issue
+
+
+@dataclass(frozen=True)
+class NodeProfile:
+    nid: int
+    t_compute: float
+    t_load: float
+    t_store: float
+    t_residual: float
+
+    @property
+    def t_node(self) -> float:
+        return max(self.t_compute, self.t_load, self.t_store, self.t_residual) + DECODE_OVERHEAD_S
+
+
+def profile_node(g: Graph, nd: Node, pu: PUSpec) -> NodeProfile:
+    t_cp = pu.gemm_seconds(nd.m, nd.n, nd.k) if (nd.m and nd.n and nd.k) else 0.0
+    in_bytes = sum(g.tensors[t].nbytes_padded for t in nd.inputs)
+    out_bytes = sum(g.tensors[t].nbytes_padded for t in nd.outputs)
+    t_ld = pu.adm_seconds(in_bytes) if in_bytes else 0.0
+    t_st = pu.adm_seconds(out_bytes) if out_bytes else 0.0
+    t_res = (
+        pu.adm_seconds(g.tensors[nd.residual_input].nbytes_padded)
+        if nd.residual_input is not None
+        else 0.0
+    )
+    return NodeProfile(nd.nid, t_cp, t_ld, t_st, t_res)
+
+
+def profile_graph(g: Graph, pu_types: dict[str, PUSpec]) -> dict[str, dict[int, NodeProfile]]:
+    """node profiles per PU kind: {kind: {nid: NodeProfile}}."""
+    return {
+        kind: {nd.nid: profile_node(g, nd, pu) for nd in g.nodes}
+        for kind, pu in pu_types.items()
+    }
+
+
+def segment_time(profiles: dict[int, NodeProfile], nids: list[int]) -> float:
+    """Steady-state round time of a contiguous node segment on one PU."""
+    return sum(profiles[nid].t_node for nid in nids)

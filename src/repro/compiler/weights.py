@@ -1,0 +1,166 @@
+"""Weight-transfer scheduling (paper Sec. IV-B, Fig. 4(d2)), SMOF-inspired.
+
+A PU's assigned subgraph often needs more weight data than its URAM capacity.
+Weights are split per computational *tile* (64 output channels — the first SA
+dimension) into fixed-size chunks; some chunks are allocated *offline*
+(resident in URAM), the rest stream *dynamically* from HBM during execution,
+scheduled so that chunks for tile t+1 load during tile t's execution.
+
+Greedy deficit-based allocation: iteratively pin chunks of the tile with the
+highest *deficit* — the stall its dynamic loads would cause after overlap
+hiding — until the capacity constraint binds:
+
+    static_bytes + max over adjacent tile pairs (dyn(t) + dyn(t+1)) <= URAM
+
+(dynamic chunks are evicted after their tile completes, so at most two
+adjacent tiles' dynamic footprints coexist).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from ..core.pu import PUSpec, URAM_BYTES
+from .graph import Graph, Node
+
+CHUNK_BYTES = URAM_BYTES  # one URAM per chunk
+
+
+@dataclass
+class Tile:
+    nid: int
+    tile_idx: int  # index within the node (64-out-channel slices)
+    weight_bytes: int
+    t_exec: float  # SA execution time of this tile
+    n_chunks: int = 0
+    static_chunks: int = 0  # allocated offline in URAM
+
+    @property
+    def dynamic_chunks(self) -> int:
+        return self.n_chunks - self.static_chunks
+
+    def dynamic_bytes(self) -> int:
+        return self.dynamic_chunks * CHUNK_BYTES
+
+
+@dataclass
+class WeightSchedule:
+    tiles: list[Tile]
+    pu_kind: str
+    capacity_bytes: int
+    t_chunk_load: float  # HBM->URAM time per chunk on the weight channel
+
+    # -- derived -------------------------------------------------------------
+    def stall_of(self, idx: int) -> float:
+        """Execution stall before tile idx: its dynamic chunks load during
+        tile idx-1's execution (cyclically across rounds for idx==0)."""
+        t = self.tiles[idx]
+        load = t.dynamic_chunks * self.t_chunk_load
+        prev_exec = self.tiles[idx - 1].t_exec if self.tiles else 0.0
+        return max(0.0, load - prev_exec)
+
+    def total_stall(self) -> float:
+        return sum(self.stall_of(i) for i in range(len(self.tiles)))
+
+    def static_bytes(self) -> int:
+        return sum(t.static_chunks * CHUNK_BYTES for t in self.tiles)
+
+    def worst_adjacent_dynamic(self) -> int:
+        if not self.tiles:
+            return 0
+        n = len(self.tiles)
+        if n == 1:
+            return self.tiles[0].dynamic_bytes()
+        return max(
+            self.tiles[i].dynamic_bytes() + self.tiles[(i + 1) % n].dynamic_bytes()
+            for i in range(n)
+        )
+
+    def feasible(self) -> bool:
+        return self.static_bytes() + self.worst_adjacent_dynamic() <= self.capacity_bytes
+
+    def fully_static(self) -> bool:
+        return all(t.dynamic_chunks == 0 for t in self.tiles)
+
+    def node_dynamic_chunks(self) -> dict[int, int]:
+        """Dynamic chunk count per node (for Compute.wchunks interlocks)."""
+        out: dict[int, int] = {}
+        for t in self.tiles:
+            out[t.nid] = out.get(t.nid, 0) + t.dynamic_chunks
+        return out
+
+
+def build_tiles(g: Graph, nids: list[int], pu: PUSpec) -> list[Tile]:
+    tiles: list[Tile] = []
+    for nid in nids:
+        nd = g.node_by_id(nid)
+        if nd.weight_bytes == 0:
+            continue
+        n_tiles = max(1, math.ceil(nd.m / pu.sa_rows))
+        per_tile_m = pu.sa_rows
+        for ti in range(n_tiles):
+            m_here = min(per_tile_m, nd.m - ti * per_tile_m)
+            wb = m_here * nd.k + 4 * m_here  # int8 weights + int32 bias
+            tiles.append(
+                Tile(
+                    nid=nid,
+                    tile_idx=ti,
+                    weight_bytes=wb,
+                    t_exec=pu.gemm_seconds(m_here, nd.n, nd.k),
+                    n_chunks=max(1, math.ceil(wb / CHUNK_BYTES)),
+                )
+            )
+    return tiles
+
+
+def schedule_weights(g: Graph, nids: list[int], pu: PUSpec) -> WeightSchedule:
+    """Greedy deficit-based offline allocation under the URAM capacity."""
+    tiles = build_tiles(g, nids, pu)
+    sched = WeightSchedule(
+        tiles=tiles,
+        pu_kind=pu.kind,
+        capacity_bytes=pu.uram_capacity_bytes,
+        t_chunk_load=pu.adm_seconds(CHUNK_BYTES),
+    )
+    if not tiles:
+        return sched
+
+    total_chunks = sum(t.n_chunks for t in tiles)
+    if total_chunks * CHUNK_BYTES <= pu.uram_capacity_bytes:
+        # Everything fits: preload all weights offline.
+        for t in tiles:
+            t.static_chunks = t.n_chunks
+        return sched
+
+    # Iteratively pin one chunk of the most deficit-prone tile.
+    while True:
+        # deficit per tile: stall caused by its remaining dynamic chunks.
+        worst_i, worst_stall = -1, 0.0
+        for i in range(len(tiles)):
+            if tiles[i].dynamic_chunks == 0:
+                continue
+            s = sched.stall_of(i)
+            if s > worst_stall:
+                worst_i, worst_stall = i, s
+        if worst_i < 0:
+            break  # no stalls remain — schedule fully hidden
+        tiles[worst_i].static_chunks += 1
+        if not sched.feasible():
+            tiles[worst_i].static_chunks -= 1  # revert; capacity bound hit
+            # try the next most deficit-prone tiles before giving up
+            candidates = sorted(
+                (i for i in range(len(tiles)) if tiles[i].dynamic_chunks > 0),
+                key=sched.stall_of,
+                reverse=True,
+            )
+            progressed = False
+            for i in candidates:
+                tiles[i].static_chunks += 1
+                if sched.feasible():
+                    progressed = True
+                    break
+                tiles[i].static_chunks -= 1
+            if not progressed:
+                break
+    assert sched.feasible()
+    return sched

@@ -1,0 +1,161 @@
+"""DNN graph builders for the compilation framework.
+
+ResNet-50 (the paper's benchmark, input 256x256 per Table III footnote) plus
+small synthetic CNNs for tests. Graphs are built *unfused* (separate Conv /
+Add / ReLU nodes, BN folded into conv weights as usual for INT8 deployment);
+``repro.compiler.fusion`` then applies the hardware-aware fusion of Fig. 4(b).
+"""
+from __future__ import annotations
+
+from .graph import Graph, Node, OpType, TensorInfo
+
+
+def _conv(g: Graph, x: TensorInfo, out_ch: int, k: int, stride: int, pad: int,
+          name: str) -> TensorInfo:
+    c, h, w = x.shape
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    out = g.add_tensor(f"{name}.out", (out_ch, oh, ow))
+    g.add_node(
+        name=name,
+        op=OpType.CONV,
+        inputs=[x.tid],
+        outputs=[out.tid],
+        m=out_ch,
+        n=oh * ow,
+        k=c * k * k,
+        kernel=(k, k),
+        stride=(stride, stride),
+        padding=(pad, pad),
+        scale_shift=7,
+    )
+    return out
+
+
+def _relu(g: Graph, x: TensorInfo, name: str) -> TensorInfo:
+    out = g.add_tensor(f"{name}.out", x.shape)
+    g.add_node(name=name, op=OpType.RELU, inputs=[x.tid], outputs=[out.tid])
+    return out
+
+
+def _add(g: Graph, a: TensorInfo, b: TensorInfo, name: str) -> TensorInfo:
+    out = g.add_tensor(f"{name}.out", a.shape)
+    g.add_node(name=name, op=OpType.ADD, inputs=[a.tid, b.tid], outputs=[out.tid])
+    return out
+
+
+def _maxpool(g: Graph, x: TensorInfo, k: int, stride: int, pad: int, name: str) -> TensorInfo:
+    c, h, w = x.shape
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    out = g.add_tensor(f"{name}.out", (c, oh, ow))
+    g.add_node(
+        name=name,
+        op=OpType.MAXPOOL,
+        inputs=[x.tid],
+        outputs=[out.tid],
+        m=c,
+        n=oh * ow,
+        k=k * k,  # vector-unit work per output element
+        kernel=(k, k),
+        stride=(stride, stride),
+        padding=(pad, pad),
+    )
+    return out
+
+
+def _gap(g: Graph, x: TensorInfo, name: str) -> TensorInfo:
+    c, h, w = x.shape
+    out = g.add_tensor(f"{name}.out", (c, 1, 1))
+    g.add_node(name=name, op=OpType.AVGPOOL, inputs=[x.tid], outputs=[out.tid],
+               m=c, n=1, k=h * w)
+    return out
+
+
+def _fc(g: Graph, x: TensorInfo, out_features: int, name: str) -> TensorInfo:
+    in_features = 1
+    for d in x.shape:
+        in_features *= d
+    out = g.add_tensor(f"{name}.out", (out_features,))
+    g.add_node(name=name, op=OpType.FC, inputs=[x.tid], outputs=[out.tid],
+               m=out_features, n=1, k=in_features, scale_shift=7)
+    return out
+
+
+def _bottleneck(g: Graph, x: TensorInfo, mid: int, out_ch: int, stride: int,
+                name: str) -> TensorInfo:
+    """ResNet-v1 bottleneck: 1x1 -> 3x3 -> 1x1 + shortcut, ReLU after add."""
+    in_ch = x.shape[0]
+    # shortcut first: the fused Conv+Add node (at conv3's position) consumes
+    # it, so it must precede conv3 in the topological order.
+    if stride != 1 or in_ch != out_ch:
+        sc = _conv(g, x, out_ch, 1, stride, 0, f"{name}.downsample")
+    else:
+        sc = x
+    a = _relu(g, _conv(g, x, mid, 1, 1, 0, f"{name}.conv1"), f"{name}.relu1")
+    b = _relu(g, _conv(g, a, mid, 3, stride, 1, f"{name}.conv2"), f"{name}.relu2")
+    c = _conv(g, b, out_ch, 1, 1, 0, f"{name}.conv3")
+    s = _add(g, c, sc, f"{name}.add")
+    return _relu(g, s, f"{name}.relu3")
+
+
+def resnet50(input_hw: int = 256) -> Graph:
+    """ResNet-50, INT8, NCHW (C,H,W tensors; batch handled per program round).
+
+    At 224x224 this graph has the canonical ~3.9 GMACs (7.7 GOPs); the paper
+    evaluates with 256x256 inputs."""
+    g = Graph(name=f"resnet50_{input_hw}")
+    x = g.add_tensor("input", (3, input_hw, input_hw))
+    g.input_tensors = [x.tid]
+
+    t = _relu(g, _conv(g, x, 64, 7, 2, 3, "conv1"), "relu1")
+    t = _maxpool(g, t, 3, 2, 1, "maxpool")
+
+    spec = [  # (blocks, mid, out, first_stride)
+        (3, 64, 256, 1),
+        (4, 128, 512, 2),
+        (6, 256, 1024, 2),
+        (3, 512, 2048, 2),
+    ]
+    for stage_idx, (blocks, mid, out_ch, stride0) in enumerate(spec, start=1):
+        for b in range(blocks):
+            t = _bottleneck(g, t, mid, out_ch, stride0 if b == 0 else 1,
+                            f"layer{stage_idx}.{b}")
+
+    t = _gap(g, t, "gap")
+    t = _fc(g, t, 1000, "fc")
+    g.output_tensors = [t.tid]
+    g.validate_topological()
+    return g
+
+
+def tiny_cnn(channels: tuple[int, ...] = (8, 16, 16), hw: int = 16,
+             residual: bool = True) -> Graph:
+    """Small CNN with one residual connection — compiler/simulator tests."""
+    g = Graph(name="tiny_cnn")
+    x = g.add_tensor("input", (channels[0], hw, hw))
+    g.input_tensors = [x.tid]
+    t = _relu(g, _conv(g, x, channels[1], 3, 1, 1, "c0"), "r0")
+    skip = t
+    t = _relu(g, _conv(g, t, channels[2], 3, 1, 1, "c1"), "r1")
+    t = _conv(g, t, channels[1], 3, 1, 1, "c2")
+    if residual:
+        t = _add(g, t, skip, "add")
+    t = _relu(g, t, "r2")
+    t = _fc(g, t, 10, "fc")
+    g.output_tensors = [t.tid]
+    g.validate_topological()
+    return g
+
+
+def linear_chain(n_convs: int = 6, ch: int = 32, hw: int = 32) -> Graph:
+    """Plain conv chain (no residuals) — partitioner unit tests."""
+    g = Graph(name=f"chain{n_convs}")
+    x = g.add_tensor("input", (ch, hw, hw))
+    g.input_tensors = [x.tid]
+    t = x
+    for i in range(n_convs):
+        t = _relu(g, _conv(g, t, ch, 3, 1, 1, f"c{i}"), f"r{i}")
+    g.output_tensors = [t.tid]
+    g.validate_topological()
+    return g

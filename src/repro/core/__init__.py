@@ -1,0 +1,46 @@
+# The paper's primary contribution: instruction-based coordination of
+# heterogeneous PUs. ISA (isa/program), ICU + ISU coordination architecture
+# (icu/isu), PU timing model (pu) and the discrete-event system simulator
+# (simulator). The compilation framework lives in repro.compiler; the
+# TPU-scale adaptation (shard_map pipeline runtime) in repro.runtime.
+from .isa import (
+    AddrCyc,
+    Compute,
+    Config,
+    DataMove,
+    Group,
+    Instruction,
+    Opcode,
+    ProgCtrl,
+    Sync,
+)
+from .program import Program, PUProgram
+from .pu import PUSpec, make_u50_system, system_peak_tops
+from .isu import ISUNetwork, Token, latency_matrix, token_latency_cycles
+from .icu import ICU
+from .simulator import MultiPUSimulator, SimResult, simulate
+
+__all__ = [
+    "AddrCyc",
+    "Compute",
+    "Config",
+    "DataMove",
+    "Group",
+    "Instruction",
+    "Opcode",
+    "ProgCtrl",
+    "Sync",
+    "Program",
+    "PUProgram",
+    "PUSpec",
+    "make_u50_system",
+    "system_peak_tops",
+    "ISUNetwork",
+    "Token",
+    "latency_matrix",
+    "token_latency_cycles",
+    "ICU",
+    "MultiPUSimulator",
+    "SimResult",
+    "simulate",
+]

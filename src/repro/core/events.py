@@ -1,0 +1,203 @@
+"""Minimal discrete-event simulation kernel (simpy-like, dependency-free).
+
+Used by the cycle-approximate multi-PU simulator (``repro.core.simulator``) to
+model ICU instruction streams, ISU token routing and buffer handshakes.
+
+Processes are Python generators that ``yield`` effect objects:
+
+  Delay(dt)          -- advance this process by ``dt`` time units
+  WaitCond(key)      -- block until ``Kernel.notify(key)`` fires AND the
+                        registered predicate (optional) evaluates true
+  Acquire(sem)       -- P() on a counting semaphore
+  Release(sem)       -- V() on a counting semaphore (non-blocking)
+
+Time is float (we use cycles of ``sys_clk``). Deterministic: ties broken by
+(priority, sequence number).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Generator, Optional
+
+
+class Effect:
+    pass
+
+
+@dataclass
+class Delay(Effect):
+    dt: float
+
+
+@dataclass
+class WaitCond(Effect):
+    """Block until ``notify(key)`` is called and ``pred()`` is true.
+
+    The predicate is re-checked on every notify; it must be side-effect free.
+    If ``pred()`` is already true at yield time the process continues
+    immediately (same timestamp).
+    """
+
+    key: Any
+    pred: Optional[Callable[[], bool]] = None
+
+
+@dataclass
+class Acquire(Effect):
+    sem: "Semaphore"
+    n: int = 1
+
+
+@dataclass
+class Release(Effect):
+    sem: "Semaphore"
+    n: int = 1
+
+
+class Semaphore:
+    """Counting semaphore with FIFO wakeup."""
+
+    def __init__(self, kernel: "Kernel", value: int, name: str = "") -> None:
+        self.kernel = kernel
+        self.value = value
+        self.name = name
+        self.waiters: list["_Proc"] = []
+
+    def try_acquire(self, n: int) -> bool:
+        if self.value >= n:
+            self.value -= n
+            return True
+        return False
+
+    def release(self, n: int = 1) -> None:
+        self.value += n
+        # Wake all waiters; they re-attempt acquisition in FIFO order.
+        waiters, self.waiters = self.waiters, []
+        for proc in waiters:
+            self.kernel._schedule(self.kernel.now, proc)
+
+
+@dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    proc: "_Proc" = field(compare=False)
+
+
+class _Proc:
+    __slots__ = ("gen", "name", "pending", "done", "result")
+
+    def __init__(self, gen: Generator, name: str) -> None:
+        self.gen = gen
+        self.name = name
+        self.pending: Optional[Effect] = None  # effect we are blocked on
+        self.done = False
+        self.result = None
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<Proc {self.name} done={self.done}>"
+
+
+class Kernel:
+    """Discrete event loop."""
+
+    def __init__(self) -> None:
+        self.now: float = 0.0
+        self._heap: list[_Event] = []
+        self._seq = itertools.count()
+        self._cond_waiters: dict[Any, list[_Proc]] = {}
+        self._procs: list[_Proc] = []
+        self.trace: list[tuple[float, str, Any]] = []
+        self.trace_enabled = False
+
+    # -- public API ---------------------------------------------------------
+    def semaphore(self, value: int, name: str = "") -> Semaphore:
+        return Semaphore(self, value, name)
+
+    def spawn(self, gen: Generator, name: str = "proc") -> _Proc:
+        proc = _Proc(gen, name)
+        self._procs.append(proc)
+        self._schedule(self.now, proc)
+        return proc
+
+    def notify(self, key: Any) -> None:
+        """Wake processes blocked on WaitCond(key)."""
+        waiters = self._cond_waiters.pop(key, None)
+        if waiters:
+            for proc in waiters:
+                self._schedule(self.now, proc)
+
+    def log(self, who: str, what: Any) -> None:
+        if self.trace_enabled:
+            self.trace.append((self.now, who, what))
+
+    def run(self, until: float = float("inf"), max_events: int = 50_000_000) -> float:
+        events = 0
+        while self._heap:
+            ev = heapq.heappop(self._heap)
+            if ev.time > until:
+                heapq.heappush(self._heap, ev)
+                break
+            events += 1
+            if events > max_events:
+                raise RuntimeError("simulation exceeded max_events (deadlock/livelock?)")
+            self.now = ev.time
+            self._step(ev.proc)
+        return self.now
+
+    def deadlocked(self) -> list[_Proc]:
+        """Processes still blocked after run() drained the heap."""
+        return [p for p in self._procs if not p.done]
+
+    # -- internals ----------------------------------------------------------
+    def _schedule(self, time: float, proc: _Proc) -> None:
+        heapq.heappush(self._heap, _Event(time, next(self._seq), proc))
+
+    def _step(self, proc: _Proc) -> None:
+        if proc.done:
+            return
+        # If blocked on a condition/semaphore, re-check before resuming.
+        eff = proc.pending
+        if isinstance(eff, WaitCond):
+            if eff.pred is not None and not eff.pred():
+                self._cond_waiters.setdefault(eff.key, []).append(proc)
+                return
+        elif isinstance(eff, Acquire):
+            if not eff.sem.try_acquire(eff.n):
+                eff.sem.waiters.append(proc)
+                return
+        proc.pending = None
+        try:
+            nxt = proc.gen.send(None)
+        except StopIteration as stop:
+            proc.done = True
+            proc.result = stop.value
+            return
+        self._dispatch(proc, nxt)
+
+    def _dispatch(self, proc: _Proc, eff: Effect) -> None:
+        if isinstance(eff, Delay):
+            self._schedule(self.now + eff.dt, proc)
+        elif isinstance(eff, WaitCond):
+            if eff.pred is None or not eff.pred():
+                proc.pending = eff
+                if eff.pred is not None and eff.pred():
+                    # racy predicate became true: run now
+                    self._schedule(self.now, proc)
+                else:
+                    self._cond_waiters.setdefault(eff.key, []).append(proc)
+            else:
+                self._schedule(self.now, proc)
+        elif isinstance(eff, Acquire):
+            if eff.sem.try_acquire(eff.n):
+                self._schedule(self.now, proc)
+            else:
+                proc.pending = eff
+                eff.sem.waiters.append(proc)
+        elif isinstance(eff, Release):
+            eff.sem.release(eff.n)
+            self._schedule(self.now, proc)
+        else:
+            raise TypeError(f"unknown effect {eff!r}")

@@ -1,0 +1,270 @@
+"""Instruction Controller Unit (paper Sec. III-B, Fig. 2(d)).
+
+Each PU's ICU holds three independent dual-port BRAMs (LD / CP / ST programs)
+with a dedicated decoder FSM per group — memory access is decoupled from
+compute, enabling overlapped pipelining inside the PU.
+
+Coordination state lives in the REQ and ACK LUTRAMs, addressed by
+(SRC_PID, BID). Incoming ISU tokens set entries; WAIT_* instructions act as
+barriers polling an entry, then clear it. SEND_* instructions push tokens into
+the local ISU through a small FIFO so the decoder never blocks on the fabric.
+
+Intra-PU dataflow interlocks (all hardware-implicit, modeled with counting
+semaphores):
+
+  LD  --(act ping-pong BRAM slots)-->  CP  --(output buffer slots)-->  ST
+  WEIGHTS_ADM / RES_ADD_ADM are issued asynchronously (the ADM engines run
+  independently); a GEMM blocks until its ``wchunks`` weight chunks and any
+  preceding residual transfers have landed (URAM/BRAM read interlock).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Optional
+
+from .events import Acquire, Delay, Kernel, Release, Semaphore, WaitCond
+from .isa import (
+    AddrCyc,
+    Compute,
+    Config,
+    DataMove,
+    Group,
+    Opcode,
+    ProgCtrl,
+    Sync,
+    effective_opcode,
+)
+from .isu import ISUNetwork, Token
+from .program import Program, PUProgram
+from .pu import PUSpec
+
+DECODE_CYCLES = 1  # instruction issue overhead (sys_clk)
+
+
+@dataclass
+class GroupStats:
+    busy: float = 0.0  # cycles in ADM transfers / GEMM execution
+    sync_wait: float = 0.0  # cycles blocked in WAIT_REQ/WAIT_ACK
+    buffer_wait: float = 0.0  # cycles blocked on intra-PU buffer slots
+    rounds_done: int = 0
+    round_start_times: list[float] = field(default_factory=list)
+    round_end_times: list[float] = field(default_factory=list)
+    instructions: int = 0
+    halted_at: Optional[float] = None
+
+
+class ICU:
+    """Per-PU instruction controller: three decoder processes + LUTRAMs."""
+
+    def __init__(
+        self,
+        kernel: Kernel,
+        spec: PUSpec,
+        isu: ISUNetwork,
+        hbm_channels: dict[int, Semaphore],
+    ) -> None:
+        self.kernel = kernel
+        self.spec = spec
+        self.isu = isu
+        self.hbm_channels = hbm_channels
+
+        # REQ/ACK LUTRAMs: (src_pid, bid) -> outstanding token count.
+        self.req_lutram: dict[tuple[int, int], int] = {}
+        self.ack_lutram: dict[tuple[int, int], int] = {}
+
+        # Intra-PU buffer interlocks.
+        self.act_free = kernel.semaphore(spec.act_buf_slots, f"pu{spec.pid}.act_free")
+        self.act_full = kernel.semaphore(0, f"pu{spec.pid}.act_full")
+        self.out_free = kernel.semaphore(spec.out_buf_slots, f"pu{spec.pid}.out_free")
+        self.out_full = kernel.semaphore(0, f"pu{spec.pid}.out_full")
+
+        # Async ADM completion counters (weights / residual streams).
+        self.weights_done = 0
+        self.res_issued = 0
+        self.res_done = 0
+        # Expected stream-completion times of in-flight LD transfers, one
+        # entry per filled act slot (FIFO pairing with GEMM consumption).
+        self.ld_stream_ends: "deque[float]" = deque()
+
+        self.stats: dict[Group, GroupStats] = {g: GroupStats() for g in Group}
+        self.program: Optional[PUProgram] = None
+
+    # -- token delivery (installed into ISUNetwork by the simulator) --------
+    def deliver(self, token: Token) -> None:
+        lut = self.req_lutram if token.kind == "req" else self.ack_lutram
+        key = (token.src_pid, token.bid)
+        lut[key] = lut.get(key, 0) + 1
+        self.kernel.notify(("lut", self.spec.pid, token.kind, key))
+
+    def preset_ack(self, src_pid: int, bid: int) -> None:
+        """Host-side LUTRAM preset (used by tests; Fig. 3 instead uses the
+        ACK-bypass prologue, which achieves the same effect in-band)."""
+        key = (src_pid, bid)
+        self.ack_lutram[key] = self.ack_lutram.get(key, 0) + 1
+
+    # -- program start -------------------------------------------------------
+    def start(self, program: PUProgram) -> None:
+        self.program = program.clone()
+        self.program.validate()
+        pid = self.spec.pid
+        self.kernel.spawn(self._decoder(Group.LD, self.program.ld), name=f"pu{pid}.LD")
+        self.kernel.spawn(self._decoder(Group.CP, self.program.cp), name=f"pu{pid}.CP")
+        self.kernel.spawn(self._decoder(Group.ST, self.program.st), name=f"pu{pid}.ST")
+
+    # -- decoder FSM ----------------------------------------------------------
+    def _decoder(self, group: Group, prog: Program):
+        st = self.stats[group]
+        pc = 0
+        rounds = 0
+        weights_issued = 0  # monotone count of WEIGHTS_ADM issued by CP
+        gemm_wtarget = 0  # cumulative weight chunks required by GEMMs so far
+        insts = prog.instructions
+
+        at_round_start = True
+        while True:
+            inst = insts[pc]
+            if at_round_start:
+                st.round_start_times.append(self.kernel.now)
+                at_round_start = False
+            st.instructions += 1
+            yield Delay(DECODE_CYCLES)
+            op = effective_opcode(inst)
+
+            if isinstance(inst, ProgCtrl):
+                pass  # round bookkeeping handled at PRG_END below
+
+            elif isinstance(inst, Config):
+                pass  # context for the successor ADM; zero extra latency
+
+            elif isinstance(inst, DataMove):
+                if group is Group.CP:
+                    # Async issue: the CP ADM engines run decoupled.
+                    if op is Opcode.WEIGHTS_ADM:
+                        weights_issued += 1
+                        self.kernel.spawn(
+                            self._async_adm(inst, kind="weights"),
+                            name=f"pu{self.spec.pid}.wadm",
+                        )
+                    else:  # RES_ADD_* : residual shortcut stream
+                        self.res_issued += 1
+                        self.kernel.spawn(
+                            self._async_adm(inst, kind="res"),
+                            name=f"pu{self.spec.pid}.radm",
+                        )
+                elif group is Group.LD:
+                    # Fill one input activation ping-pong slot, *streaming*:
+                    # the slot is usable by the SA once the first tile lands
+                    # (ld_stream_ends lets the GEMM rate-match the remainder).
+                    t0 = self.kernel.now
+                    yield Acquire(self.act_free)
+                    st.buffer_wait += self.kernel.now - t0
+                    chan = self.hbm_channels[inst.channel]
+                    t0 = self.kernel.now
+                    yield Acquire(chan)
+                    st.buffer_wait += self.kernel.now - t0
+                    total = self.spec.adm_sys_cycles(inst.length)
+                    delta = min(total, self.spec.stream_tile_cycles(inst.length))
+                    yield Delay(delta)
+                    self.ld_stream_ends.append(self.kernel.now + (total - delta))
+                    yield Release(self.act_full)
+                    yield Delay(total - delta)
+                    st.busy += total
+                    yield Release(chan)
+                else:  # ST: drain one output buffer slot.
+                    t0 = self.kernel.now
+                    yield Acquire(self.out_full)
+                    st.buffer_wait += self.kernel.now - t0
+                    yield from self._blocking_adm(inst, st)
+                    yield Release(self.out_free)
+
+            elif isinstance(inst, AddrCyc):
+                pred = insts[pc - 1]
+                assert isinstance(pred, DataMove)
+                pred.cur_ba = inst.step(pred.cur_ba)  # dynamic write-back
+
+            elif isinstance(inst, Sync):
+                if inst.is_send:
+                    self.isu.send(
+                        Token(self.spec.pid, inst.pid, inst.bid, inst.kind)
+                    )
+                else:
+                    lut = self.req_lutram if inst.kind == "req" else self.ack_lutram
+                    key = (inst.pid, inst.bid)
+                    t0 = self.kernel.now
+                    yield WaitCond(
+                        ("lut", self.spec.pid, inst.kind, key),
+                        pred=lambda lut=lut, key=key: lut.get(key, 0) > 0,
+                    )
+                    lut[key] -= 1  # clear the entry, barrier passed
+                    st.sync_wait += self.kernel.now - t0
+                inst.step()  # BID cycling write-back (Table I(b))
+
+            elif isinstance(inst, Compute):
+                gemm_wtarget += inst.wchunks
+                # URAM interlock: streamed weight chunks must have landed.
+                t0 = self.kernel.now
+                yield WaitCond(
+                    ("weights", self.spec.pid),
+                    pred=lambda t=gemm_wtarget: self.weights_done >= t,
+                )
+                # Residual stream interlock.
+                if inst.add_enable:
+                    tgt = self.res_issued
+                    yield WaitCond(
+                        ("res", self.spec.pid),
+                        pred=lambda t=tgt: self.res_done >= t,
+                    )
+                yield Acquire(self.act_full)  # consume one input slot
+                yield Acquire(self.out_free)  # claim one output slot
+                st.buffer_wait += self.kernel.now - t0
+                dur = self.spec.gemm_sys_cycles(inst.m, inst.n, inst.k) * max(1, inst.rounds)
+                # Rate-match a still-streaming input: the SA cannot finish
+                # before the LD transfer delivers its last tile.
+                if self.ld_stream_ends:
+                    ld_end = self.ld_stream_ends.popleft()
+                    dur = max(dur, ld_end - self.kernel.now)
+                yield Delay(dur)
+                st.busy += dur
+                yield Release(self.act_free)
+                yield Release(self.out_full)
+
+            else:  # pragma: no cover
+                raise TypeError(f"unhandled instruction {inst!r}")
+
+            if inst.prg_end:
+                rounds += 1
+                st.rounds_done = rounds
+                st.round_end_times.append(self.kernel.now)
+                ctrl = prog.progctrl
+                if ctrl.nr != 0 and rounds >= ctrl.nr:
+                    st.halted_at = self.kernel.now
+                    return
+                pc = ctrl.icu_ba
+                at_round_start = True
+            else:
+                pc += 1
+
+    # -- ADM helpers ----------------------------------------------------------
+    def _blocking_adm(self, inst: DataMove, st: GroupStats):
+        chan = self.hbm_channels[inst.channel]
+        t0 = self.kernel.now
+        yield Acquire(chan)
+        st.buffer_wait += self.kernel.now - t0
+        dur = self.spec.adm_sys_cycles(inst.length)
+        yield Delay(dur)
+        st.busy += dur
+        yield Release(chan)
+
+    def _async_adm(self, inst: DataMove, kind: str):
+        chan = self.hbm_channels[inst.channel]
+        yield Acquire(chan)
+        dur = self.spec.adm_sys_cycles(inst.length)
+        yield Delay(dur)
+        yield Release(chan)
+        if kind == "weights":
+            self.weights_done += 1
+            self.kernel.notify(("weights", self.spec.pid))
+        else:
+            self.res_done += 1
+            self.kernel.notify(("res", self.spec.pid))

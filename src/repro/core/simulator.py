@@ -1,0 +1,125 @@
+"""Cycle-approximate multi-PU system simulator.
+
+Wires together: PU specs (timing), ICUs (instruction decoding + LUTRAM
+coordination state), the ISU token network (deterministic latencies), and the
+shared HBM channels. Executes the instruction programs produced by the
+compilation framework and reports throughput / latency / efficiency — this is
+the executable model behind the paper's Figs. 3, 6 and Table III.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from .events import Kernel, Semaphore
+from .icu import ICU, GroupStats
+from .isa import Group
+from .isu import ISUNetwork
+from .program import PUProgram
+from .pu import N_HBM_CHANNELS, PUSpec, SYS_CLK_HZ, make_u50_system, system_peak_tops
+
+
+@dataclass
+class SimResult:
+    sys_clk_hz: float
+    end_cycles: float
+    rounds: int
+    pu_stats: dict[int, dict[Group, GroupStats]]
+    tokens_sent: int
+    deadlocked: bool
+    # round r latency: first-PU LD round start -> last-PU ST round end
+    round_latencies_cycles: list[float] = field(default_factory=list)
+    round_end_cycles: list[float] = field(default_factory=list)
+
+    # -- derived metrics -----------------------------------------------------
+    @property
+    def end_seconds(self) -> float:
+        return self.end_cycles / self.sys_clk_hz
+
+    def throughput_fps(self, warmup: int = 1) -> float:
+        """Steady-state rounds/s measured after ``warmup`` rounds."""
+        ends = self.round_end_cycles
+        if len(ends) <= warmup:
+            if not ends:
+                return 0.0
+            return self.rounds / self.end_seconds
+        n = len(ends) - warmup
+        dt = (ends[-1] - ends[warmup - 1]) / self.sys_clk_hz if warmup > 0 else ends[-1] / self.sys_clk_hz
+        return n / dt if dt > 0 else 0.0
+
+    def latency_seconds(self, skip_warmup: int = 1) -> float:
+        lats = self.round_latencies_cycles[skip_warmup:] or self.round_latencies_cycles
+        if not lats:
+            return 0.0
+        return (sum(lats) / len(lats)) / self.sys_clk_hz
+
+    def busy_fraction(self, pid: int) -> float:
+        cp = self.pu_stats[pid][Group.CP]
+        return cp.busy / self.end_cycles if self.end_cycles else 0.0
+
+
+class MultiPUSimulator:
+    """Discrete-event execution of PUPrograms on the heterogeneous system."""
+
+    def __init__(self, pus: Optional[list[PUSpec]] = None, trace: bool = False) -> None:
+        self.pus = pus if pus is not None else make_u50_system()
+        self.kernel = Kernel()
+        self.kernel.trace_enabled = trace
+        self.isu = ISUNetwork(self.kernel, self.pus)
+        self.hbm_channels: dict[int, Semaphore] = {
+            c: self.kernel.semaphore(1, f"hbm{c}") for c in range(N_HBM_CHANNELS)
+        }
+        self.icus: dict[int, ICU] = {
+            p.pid: ICU(self.kernel, p, self.isu, self.hbm_channels) for p in self.pus
+        }
+        self.isu.deliver = lambda dst, tok: self.icus[dst].deliver(tok)
+
+    @property
+    def peak_tops(self) -> float:
+        return system_peak_tops(self.pus)
+
+    def run(
+        self,
+        programs: list[PUProgram],
+        *,
+        until_cycles: float = float("inf"),
+        first_pid: Optional[int] = None,
+        last_pid: Optional[int] = None,
+    ) -> SimResult:
+        """Load + start all programs, run to completion (or ``until_cycles``).
+
+        ``first_pid``/``last_pid`` identify the pipeline entry/exit PUs for
+        latency accounting (default: first/last program in the list)."""
+        if not programs:
+            raise ValueError("no programs")
+        for prog in programs:
+            self.icus[prog.pid].start(prog)
+        end = self.kernel.run(until=until_cycles)
+
+        first = first_pid if first_pid is not None else programs[0].pid
+        last = last_pid if last_pid is not None else programs[-1].pid
+        stats = {p.pid: self.icus[p.pid].stats for p in self.pus}
+
+        ld_starts = stats[first][Group.LD].round_start_times
+        st_ends = stats[last][Group.ST].round_end_times
+        nrounds = min(len(ld_starts), len(st_ends))
+        latencies = [st_ends[r] - ld_starts[r] for r in range(nrounds)]
+
+        # Deadlock: processes still pending but no events left before horizon.
+        dead = bool(self.kernel.deadlocked()) and end < until_cycles
+
+        return SimResult(
+            sys_clk_hz=self.pus[0].sys_clk_hz if self.pus else SYS_CLK_HZ,
+            end_cycles=end,
+            rounds=len(st_ends),
+            pu_stats=stats,
+            tokens_sent=self.isu.tokens_sent,
+            deadlocked=dead,
+            round_latencies_cycles=latencies,
+            round_end_cycles=list(st_ends),
+        )
+
+
+def simulate(programs: list[PUProgram], pus: Optional[list[PUSpec]] = None,
+             **kw) -> SimResult:
+    return MultiPUSimulator(pus).run(programs, **kw)

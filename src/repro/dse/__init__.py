@@ -1,0 +1,22 @@
+# DSE methodology (paper Sec. V-A): single-batch enumeration, multi-batch
+# hybrid-parallel composition, Pareto analysis.
+from .explorer import (
+    DSEResult,
+    MultiBatchSchedule,
+    SingleBatchPoint,
+    enumerate_multi_batch,
+    enumerate_single_batch,
+    explore,
+)
+from .pareto import constrained, pareto_front
+
+__all__ = [
+    "DSEResult",
+    "MultiBatchSchedule",
+    "SingleBatchPoint",
+    "enumerate_multi_batch",
+    "enumerate_single_batch",
+    "explore",
+    "constrained",
+    "pareto_front",
+]

@@ -1,0 +1,184 @@
+"""Three-step Design Space Exploration (paper Sec. V-A, Fig. 5).
+
+Step 1 — enumerate all feasible single-batch configurations (a, b): a PU1x +
+b PU2x units pipelining one batch. With 5+5 PUs this yields 35 configs; each
+is compiled through the full framework and its performance cached.
+
+Step 2 — compose multi-batch schedules: all unordered combinations of
+single-batch configurations within the PU resource constraint. Each batch is
+processed by a disjoint PU subset with internal pipeline parallelism (hybrid
+parallelism). Schedule metrics: aggregated throughput, system latency (the
+slowest member), cumulative TOPS of assigned PUs.
+
+Step 3 — Pareto analysis (repro.dse.pareto) + application constraints.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+from ..compiler.compile import CompiledModel, compile_model
+from ..compiler.graph import Graph
+from ..core.pu import PUSpec, make_u50_system
+from .pareto import pareto_front
+
+PU1X_TOPS = 0.3072
+PU2X_TOPS = 0.6144
+
+
+@dataclass(frozen=True)
+class SingleBatchPoint:
+    a: int  # PU1x units
+    b: int  # PU2x units
+    fps: float
+    latency: float
+    tops: float
+    pbe: float
+
+    @property
+    def config(self) -> tuple[int, int]:
+        return (self.a, self.b)
+
+    @property
+    def throughput(self) -> float:
+        return self.fps
+
+    @property
+    def batch(self) -> int:
+        return 1
+
+
+@dataclass(frozen=True)
+class MultiBatchSchedule:
+    configs: tuple[tuple[int, int], ...]  # sorted (a,b) per concurrent batch
+    throughput: float  # aggregated fps
+    latency: float  # slowest member pipeline
+    tops: float  # cumulative DSP TOPS
+    system_pbe: float  # capacity-weighted busy fraction across all members
+
+    @property
+    def batch(self) -> int:
+        return len(self.configs)
+
+    @property
+    def total_a(self) -> int:
+        return sum(c[0] for c in self.configs)
+
+    @property
+    def total_b(self) -> int:
+        return sum(c[1] for c in self.configs)
+
+
+def enumerate_single_batch(
+    g: Graph,
+    *,
+    n_pu1x: int = 5,
+    n_pu2x: int = 5,
+    pus: Optional[list[PUSpec]] = None,
+    keep_compiled: bool = False,
+) -> tuple[list[SingleBatchPoint], dict[tuple[int, int], CompiledModel]]:
+    """Step 1: compile every (a, b) and cache its characteristics."""
+    pus = pus if pus is not None else make_u50_system()
+    points: list[SingleBatchPoint] = []
+    compiled: dict[tuple[int, int], CompiledModel] = {}
+    for a in range(n_pu1x + 1):
+        for b in range(n_pu2x + 1):
+            if a + b == 0:
+                continue
+            cm = compile_model(g, a, b, pus=pus)
+            pt = SingleBatchPoint(
+                a=a,
+                b=b,
+                fps=cm.predicted_fps,
+                latency=cm.predicted_latency,
+                tops=cm.used_tops,
+                pbe=cm.pbe(),
+            )
+            points.append(pt)
+            if keep_compiled:
+                compiled[(a, b)] = cm
+    return points, compiled
+
+
+def enumerate_multi_batch(
+    points: list[SingleBatchPoint],
+    *,
+    n_pu1x: int = 5,
+    n_pu2x: int = 5,
+) -> list[MultiBatchSchedule]:
+    """Step 2: all unordered combinations under the PU resource constraint."""
+    by_cfg = {p.config: p for p in points}
+    cfgs = sorted(by_cfg)  # deterministic order for unordered enumeration
+    schedules: list[MultiBatchSchedule] = []
+
+    def rec(idx: int, rem_a: int, rem_b: int, chosen: list[tuple[int, int]]) -> None:
+        if chosen:
+            members = [by_cfg[c] for c in chosen]
+            thr = sum(m.fps for m in members)
+            lat = max(m.latency for m in members)
+            tops = sum(m.tops for m in members)
+            # system PBE: capacity-weighted utilization across members; each
+            # member's PUs are busy pbe fraction of its round.
+            pbe = sum(m.pbe * m.tops for m in members) / tops if tops else 0.0
+            schedules.append(
+                MultiBatchSchedule(
+                    configs=tuple(sorted(chosen)),
+                    throughput=thr,
+                    latency=lat,
+                    tops=tops,
+                    system_pbe=pbe,
+                )
+            )
+        for i in range(idx, len(cfgs)):
+            a, b = cfgs[i]
+            if a <= rem_a and b <= rem_b:
+                chosen.append((a, b))
+                rec(i, rem_a - a, rem_b - b, chosen)  # multiset: reuse i
+                chosen.pop()
+
+    rec(0, n_pu1x, n_pu2x, [])
+    return schedules
+
+
+@dataclass
+class DSEResult:
+    single: list[SingleBatchPoint]
+    multi: list[MultiBatchSchedule]
+    single_frontier: list[SingleBatchPoint]
+    multi_frontier: list[MultiBatchSchedule]
+
+    # paper design points -----------------------------------------------------
+    @property
+    def dp_a(self) -> SingleBatchPoint:
+        """Highest single-batch throughput (pipeline across all PUs)."""
+        return max(self.single, key=lambda p: p.fps)
+
+    @property
+    def dp_b(self) -> MultiBatchSchedule:
+        """Max system throughput at the smallest batch achieving it."""
+        best = max(self.multi, key=lambda s: s.throughput)
+        near = [s for s in self.multi if s.throughput >= 0.995 * best.throughput]
+        return min(near, key=lambda s: (s.batch, s.latency))
+
+    @property
+    def dp_c(self) -> MultiBatchSchedule:
+        """Maximum batch-level parallelism: one PU per batch."""
+        target = tuple(sorted([(1, 0)] * 5 + [(0, 1)] * 5))
+        for s in self.multi:
+            if s.configs == target:
+                return s
+        raise LookupError("one-PU-per-batch schedule missing")
+
+
+def explore(g: Graph, *, n_pu1x: int = 5, n_pu2x: int = 5,
+            tolerance: float = 0.0) -> DSEResult:
+    single, _ = enumerate_single_batch(g, n_pu1x=n_pu1x, n_pu2x=n_pu2x)
+    multi = enumerate_multi_batch(single, n_pu1x=n_pu1x, n_pu2x=n_pu2x)
+    sf = pareto_front(
+        single, [lambda p: p.fps, lambda p: -p.latency], tolerance=tolerance
+    )
+    mf = pareto_front(
+        multi, [lambda s: s.throughput, lambda s: -s.latency], tolerance=tolerance
+    )
+    return DSEResult(single=single, multi=multi, single_frontier=sf, multi_frontier=mf)

@@ -1,0 +1,56 @@
+"""Pareto analysis for the DSE methodology (paper Sec. V-A, step 3)."""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Sequence, TypeVar
+
+T = TypeVar("T")
+
+
+def pareto_front(
+    points: Sequence[T],
+    objectives: Sequence[Callable[[T], float]],
+    *,
+    tolerance: float = 0.0,
+) -> list[T]:
+    """Maximizing Pareto frontier over ``objectives`` (negate for minimize).
+
+    ``tolerance`` (relative) admits near-frontier points, as in Fig. 6(b)
+    ("applied with a small tolerance")."""
+    vals = [[obj(p) for obj in objectives] for p in points]
+
+    def dominates(i: int, j: int) -> bool:
+        ge = all(vals[i][k] >= vals[j][k] * (1 + tolerance) if vals[j][k] >= 0
+                 else vals[i][k] >= vals[j][k] * (1 - tolerance)
+                 for k in range(len(objectives)))
+        gt = any(vals[i][k] > vals[j][k] for k in range(len(objectives)))
+        return ge and gt
+
+    out = []
+    for j in range(len(points)):
+        if not any(dominates(i, j) for i in range(len(points)) if i != j):
+            out.append(points[j])
+    return out
+
+
+def constrained(
+    points: Iterable[T],
+    *,
+    max_latency: float | None = None,
+    min_throughput: float | None = None,
+    max_batch: int | None = None,
+    latency_of: Callable[[T], float] = lambda p: p.latency,
+    throughput_of: Callable[[T], float] = lambda p: p.throughput,
+    batch_of: Callable[[T], int] = lambda p: p.batch,
+) -> list[T]:
+    """Application-constraint filtering (max latency / min throughput /
+    target batch), per the paper's configuration-selection step."""
+    out = []
+    for p in points:
+        if max_latency is not None and latency_of(p) > max_latency:
+            continue
+        if min_throughput is not None and throughput_of(p) < min_throughput:
+            continue
+        if max_batch is not None and batch_of(p) > max_batch:
+            continue
+        out.append(p)
+    return out

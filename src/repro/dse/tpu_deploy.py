@@ -1,0 +1,96 @@
+"""The paper's DSE methodology on the TPU target: enumerate deployments of
+an architecture over a fixed chip pool (pipeline stages x data replicas x
+tensor shards), cost each from the analytic roofline, Pareto-filter — the
+exact Fig. 5 three-step recipe with TPU chips standing in for PUs.
+
+A deployment = (S stages, R replicas, T tensor shards), S*R*T = chips.
+Each replica pipelines microbatches through S stages of L/S layers computed
+on T chips; batch-level parallelism across the R replicas = the paper's
+hybrid parallelism. Runtime switching between deployments is a re-jit on
+the same mesh (instruction-program swap), never a reconfiguration.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from ..configs.base import ArchConfig
+from ..runtime.pipeline import layer_cost_seconds
+from .pareto import pareto_front
+
+ICI_BW = 50e9  # bytes/s/link
+
+
+@dataclass(frozen=True)
+class Deployment:
+    stages: int
+    replicas: int
+    tensor: int
+    throughput: float  # sequences/s aggregate
+    latency: float  # end-to-end per batch
+    batch: int  # concurrent sequences in flight
+
+    @property
+    def label(self) -> str:
+        return f"S{self.stages}xR{self.replicas}xT{self.tensor}"
+
+
+def _divisors(n: int) -> list[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def enumerate_deployments(
+    cfg: ArchConfig,
+    *,
+    chips: int = 256,
+    seq_len: int = 4096,
+    microbatch: int = 4,
+    microbatches: int = 8,
+) -> list[Deployment]:
+    out = []
+    L = cfg.num_layers
+    hbm_budget = 14e9  # usable bytes/chip (v5e 16 GB minus runtime)
+    for S in _divisors(chips):
+        if S > L:
+            continue
+        for T in _divisors(chips // S):
+            R = chips // (S * T)
+            # weights replicate across replicas: must fit S x T chips
+            w_per_chip = 2.0 * cfg.param_count() / (S * T)
+            kv_per_chip = (  # in-flight microbatch activations (rough)
+                2.0 * microbatch * microbatches * seq_len * cfg.d_model / T
+            )
+            if w_per_chip + kv_per_chip > hbm_budget:
+                continue
+            per_layer = layer_cost_seconds(cfg, seq_len, microbatch, T)
+            # TP collectives: ~2 all-reduces of the (mb, s, d) activation per
+            # layer, ring cost 2(T-1)/T on the ICI
+            if T > 1:
+                ar = 2 * (2 * (T - 1) / T) * microbatch * seq_len * cfg.d_model * 2 / ICI_BW
+                per_layer += ar
+            lps = math.ceil(L / S)
+            stage_t = lps * per_layer
+            # boundary transfer per microbatch between stages
+            boundary = 2 * microbatch * seq_len * cfg.d_model / T / ICI_BW
+            stage_t = max(stage_t, boundary)
+            thr = R * microbatch / stage_t
+            lat = (S + microbatches - 1) * stage_t
+            out.append(
+                Deployment(
+                    stages=S,
+                    replicas=R,
+                    tensor=T,
+                    throughput=thr,
+                    latency=lat,
+                    batch=R * microbatches * microbatch,
+                )
+            )
+    return out
+
+
+def explore_tpu(cfg: ArchConfig, **kw):
+    points = enumerate_deployments(cfg, **kw)
+    frontier = pareto_front(
+        points, [lambda p: p.throughput, lambda p: -p.latency]
+    )
+    return points, frontier

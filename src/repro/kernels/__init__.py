@@ -1,0 +1,10 @@
+# Pallas TPU kernels for the compute hot-spots, each with:
+#   kernel.py -- pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+#   ops.py    -- jit'd dispatch wrapper (TPU kernel / jnp reference fallback)
+#   ref.py    -- pure-jnp oracle used by tests and CPU lowering
+#
+#   gemm_int8        -- the paper's PU compute op: INT8 GEMM, power-of-two
+#                       requantization, fused residual-add + ReLU (MXU-tiled)
+#   flash_attention  -- blockwise causal/windowed GQA attention
+#   ssd_scan         -- Mamba2 SSD chunked scan
+#   rwkv6            -- RWKV6 wkv recurrence (chunk-tiled state updates)

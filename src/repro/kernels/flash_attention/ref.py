@@ -1,0 +1,177 @@
+"""Pure-jnp oracles for blockwise GQA attention (causal / sliding window).
+
+``mha_reference``      -- dense O(S^2)-memory oracle (small shapes, tests).
+``chunked_attention``  -- online-softmax double-scan in pure jnp: O(S*block)
+                          memory, lowers to while loops. This is the XLA
+                          fallback the models use for long sequences (the
+                          dense oracle would materialize 32k^2 score tensors
+                          at prefill). KV heads are repeated to q-heads up
+                          front so head-dim sharding propagates cleanly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def repeat_kv(k: jax.Array, rep: int) -> jax.Array:
+    """(b, t, G, hd) -> (b, t, G*rep, hd); XLA fuses the broadcast."""
+    if rep == 1:
+        return k
+    b, t, G, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, t, G, rep, hd)).reshape(
+        b, t, G * rep, hd
+    )
+
+
+def chunked_attention(
+    q: jax.Array,  # (b, s, H, hd)
+    k: jax.Array,  # (b, t, G, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_q: int = 512,
+    block_k: int = 1024,
+) -> jax.Array:
+    b, s, H, hd = q.shape
+    t, G = k.shape[1], k.shape[2]
+    sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+    k = repeat_kv(k, H // G)
+    v = repeat_kv(v, H // G)
+
+    bq = min(block_q, s)
+    bk = min(block_k, t)
+    nq, nk = -(-s // bq), -(-t // bk)
+    pad_q, pad_k = nq * bq - s, nk * bk - t
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    # (nq, b, H, bq, hd) / (nk, b, H, bk, hd) — pinned batch+head sharded:
+    # without the constraint, the remat'd backward of the double scan loses
+    # the sharding and all-gathers kv blocks at *global* batch size
+    from ...runtime.pspec import constrain
+
+    qs = qp.reshape(b, nq, bq, H, hd).transpose(1, 0, 3, 2, 4) * sc
+    ks = kp.reshape(b, nk, bk, H, hd).transpose(1, 0, 3, 2, 4)
+    vs = vp.reshape(b, nk, bk, H, hd).transpose(1, 0, 3, 2, 4)
+    qs = constrain(qs, "attn_chunk")
+    ks = constrain(ks, "attn_chunk")
+    vs = constrain(vs, "attn_chunk")
+
+    def q_block(carry, qi_q):
+        qi, qb = qi_q  # (), (b, H, bq, hd)
+
+        def kv_block(state, ki_kv):
+            m, l, acc = state
+            ki, kb, vb = ki_kv
+            sqk = jnp.einsum("bhqd,bhkd->bhqk", qb, kb).astype(jnp.float32)
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            mask = (cols < t) & (rows < s)
+            if causal:
+                mask &= cols <= rows
+            if window is not None:
+                mask &= cols > rows - window
+            sqk = jnp.where(mask[None, None], sqk, -1e30)
+            m_new = jnp.maximum(m, jnp.max(sqk, axis=-1, keepdims=True))
+            p = jnp.where(mask[None, None], jnp.exp(sqk - m_new), 0.0)
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p, vb.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, H, bq, 1), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, H, bq, 1), jnp.float32)
+        a0 = jnp.zeros((b, H, bq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0), (jnp.arange(nk), ks, vs)
+        )
+        out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+        return carry, out
+
+    _, outs = jax.lax.scan(q_block, None, (jnp.arange(nq), qs))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, nq * bq, H, hd)
+    return out[:, :s]
+
+
+def banded_attention(
+    q: jax.Array,  # (b, s, H, hd)
+    k: jax.Array,  # (b, s, G, hd)  (self-attention: t == s)
+    v: jax.Array,
+    *,
+    window: int,
+    scale: Optional[float] = None,
+    block_q: int = 512,
+) -> jax.Array:
+    """Sliding-window causal attention computed on the band only: each q
+    chunk attends a fixed (window + block) kv slice — O(S * window) compute
+    instead of masked O(S^2) (the windowed layers of gemma3 / danube3)."""
+    b, s, H, hd = q.shape
+    G = k.shape[2]
+    sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+    k = repeat_kv(k, H // G)
+    v = repeat_kv(v, H // G)
+
+    bq = min(block_q, s)
+    nq = -(-s // bq)
+    pad_q = nq * bq - s
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    # left-pad kv by `window` so chunk i's band starts at padded index i*bq
+    kp = jnp.pad(k, ((0, 0), (window, pad_q), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, pad_q), (0, 0), (0, 0)))
+    band = window + bq
+
+    qs = qp.reshape(b, nq, bq, H, hd).transpose(1, 0, 3, 2, 4) * sc  # (nq,b,H,bq,hd)
+
+    def chunk(carry, qi_qb):
+        qi, qb = qi_qb
+        kb = jax.lax.dynamic_slice_in_dim(kp, qi * bq, band, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, qi * bq, band, axis=1)
+        kb = kb.transpose(0, 2, 1, 3)  # (b,H,band,hd)
+        vb = vb.transpose(0, 2, 1, 3)
+        sqk = jnp.einsum("bhqd,bhkd->bhqk", qb, kb).astype(jnp.float32)
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, band), 0)
+        cols = qi * bq - window + jax.lax.broadcasted_iota(jnp.int32, (bq, band), 1)
+        mask = (cols >= 0) & (cols <= rows) & (cols > rows - window) & (rows < s)
+        sqk = jnp.where(mask[None, None], sqk, -1e30)
+        p = jax.nn.softmax(sqk, axis=-1)
+        out = jnp.einsum("bhqk,bhkd->bhqd", p, vb.astype(jnp.float32))
+        return carry, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(chunk, None, (jnp.arange(nq), qs))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, nq * bq, H, hd)
+    return out[:, :s]
+
+
+def mha_reference(
+    q: jax.Array,  # (b, s, H, hd)
+    k: jax.Array,  # (b, t, G, hd)
+    v: jax.Array,  # (b, t, G, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    b, s, H, hd = q.shape
+    t, G = k.shape[1], k.shape[2]
+    rep = H // G
+    sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qh = q.reshape(b, s, G, rep, hd)
+    scores = jnp.einsum("bsgrq,btgq->bgrst", qh, k).astype(jnp.float32) * sc
+
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgrst,btgq->bsgrq", probs, v)
+    return out.reshape(b, s, H, hd)

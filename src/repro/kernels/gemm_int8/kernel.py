@@ -1,0 +1,107 @@
+"""Pallas TPU kernel for the INT8 PU GEMM (the paper's SA compute op,
+re-tiled for the MXU).
+
+The paper's PU streams 64-output-channel tiles through a 64x4/64x8 systolic
+array with URAM-resident weights. On TPU the analogous blocking is
+(bm, bn, bk) = (128, 128, 512) MXU tiles with VMEM-resident accumulators:
+
+  grid = (M/bm, N/bn, K/bk), K sequential ("arbitrary") so the int32
+  accumulator tile lives in VMEM scratch across K steps — the URAM
+  accumulation of the SA, mapped onto the TPU memory hierarchy.
+
+Epilogue (the PU post-processing block, fused): +bias, power-of-two
+requantization shift, optional residual add, optional ReLU, saturate to
+INT8. Residual fusion = the paper's FusedConvAdd(ReLU) node.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BM, BN, BK = 128, 128, 512
+
+
+def _gemm_kernel(a_ref, w_ref, bias_ref, res_ref, o_ref, acc_scr,
+                 *, shift: int, relu: bool, has_res: bool, n_k: int,
+                 k_len: int, bk: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    a = a_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    # ragged final K block: zero the padded reduction columns
+    k_valid = (ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)) < k_len
+    a = jnp.where(k_valid, a, 0)
+    acc_scr[...] += jax.lax.dot_general(
+        a, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+    @pl.when(ki == n_k - 1)
+    def _epilogue():
+        acc = acc_scr[...] + bias_ref[...].astype(jnp.int32)
+        if shift > 0:
+            acc = (acc + (1 << (shift - 1))) >> shift
+        if has_res:
+            acc = acc + res_ref[...].astype(jnp.int32)
+        if relu:
+            acc = jnp.maximum(acc, 0)
+        o_ref[...] = jnp.clip(acc, -128, 127).astype(jnp.int8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("shift", "relu", "bm", "bn", "bk", "interpret")
+)
+def gemm_int8_tpu(
+    a: jax.Array,  # (M, K) int8
+    w: jax.Array,  # (K, N) int8
+    bias: jax.Array,  # (N,) int32
+    residual: Optional[jax.Array] = None,  # (M, N) int8
+    *,
+    shift: int = 7,
+    relu: bool = False,
+    bm: int = BM,
+    bn: int = BN,
+    bk: int = BK,
+    interpret: bool = False,
+) -> jax.Array:
+    M, K = a.shape
+    N = w.shape[1]
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    gm, gn, gk = pl.cdiv(M, bm), pl.cdiv(N, bn), pl.cdiv(K, bk)
+    has_res = residual is not None
+    res = residual if has_res else jnp.zeros((1, 1), jnp.int8)
+
+    kernel = functools.partial(
+        _gemm_kernel, shift=shift, relu=relu, has_res=has_res, n_k=gk,
+        k_len=K, bk=bk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            (
+                pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
+                if has_res
+                else pl.BlockSpec((1, 1), lambda i, j, k: (0, 0))
+            ),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int8),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, w, bias.reshape(1, N), res)
+    return out

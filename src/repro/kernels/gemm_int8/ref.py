@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the paper's PU compute op: INT8 GEMM with INT32
+accumulation, power-of-two requantization (round-half-up shift), optional
+fused residual-add + ReLU, saturating INT8 output — the FusedConvAdd(ReLU)
+dataflow of the PU post-processing block."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_int8_reference(
+    a: jax.Array,  # (M, K) int8 activations
+    w: jax.Array,  # (K, N) int8 weights
+    bias: Optional[jax.Array] = None,  # (N,) int32
+    *,
+    shift: int = 7,  # power-of-two scale: out = acc >> shift
+    relu: bool = False,
+    residual: Optional[jax.Array] = None,  # (M, N) int8, added post-scale
+) -> jax.Array:
+    acc = jnp.dot(a.astype(jnp.int32), w.astype(jnp.int32))
+    if bias is not None:
+        acc = acc + bias.astype(jnp.int32)[None, :]
+    if shift > 0:  # round-half-up requantization
+        acc = (acc + (1 << (shift - 1))) >> shift
+    if residual is not None:
+        acc = acc + residual.astype(jnp.int32)
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    return jnp.clip(acc, -128, 127).astype(jnp.int8)

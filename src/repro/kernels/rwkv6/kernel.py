@@ -1,0 +1,93 @@
+"""Pallas TPU kernel for the RWKV6 wkv recurrence, chunk-tiled.
+
+Grid = (batch, heads, seq_chunks); the chunk dimension is sequential
+("arbitrary") so the (P, P) fp32 state matrix lives in VMEM scratch across
+chunks — the TPU analogue of keeping the recurrence state resident (URAM-
+resident accumulators in the paper's PU). Within a chunk the recurrence
+steps run as an unrolled loop of (1,P)x(P,P) VPU/MXU ops on VMEM-resident
+tiles; HBM traffic is one stream of r/k/v/w tiles per chunk.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sout_ref,
+                 state_scr, *, chunk: int, seq_len: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    u_col = u_ref[0].astype(jnp.float32)[:, None]  # (P, 1): scales the k-dim
+
+    def step(t, S):
+        rt = r_ref[0, t, 0, :].astype(jnp.float32)[None, :]  # (1, P)
+        kt = k_ref[0, t, 0, :].astype(jnp.float32)[None, :]
+        vt = v_ref[0, t, 0, :].astype(jnp.float32)[None, :]
+        wt = w_ref[0, t, 0, :].astype(jnp.float32)[None, :]
+        kv = kt.T @ vt  # (P, P)
+        y = rt @ (S + u_col * kv)  # (1, P)
+        pos = ci * chunk + t
+        @pl.when(pos < seq_len)
+        def _store():
+            y_ref[0, t, 0, :] = y[0].astype(y_ref.dtype)
+        S = S * wt.T + kv
+        return S
+
+    S = state_scr[...]
+    S = jax.lax.fori_loop(0, chunk, step, S)
+    state_scr[...] = S
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        sout_ref[0, 0] = S.astype(sout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_tpu(r, k, v, w, u, state, *, chunk: int = DEFAULT_CHUNK,
+             interpret: bool = False):
+    """r/k/v/w: (b, s, h, p); u: (h, p); state: (b, h, p, p) fp32."""
+    b, s, h, p = r.shape
+    ch = min(chunk, s)
+    nc = pl.cdiv(s, ch)
+    pad = nc * ch - s
+    if pad:
+        padfn = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = padfn(r), padfn(k), padfn(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+
+    kernel = functools.partial(_wkv6_kernel, chunk=ch, seq_len=s)
+    seq_spec = pl.BlockSpec((1, ch, 1, p), lambda bb, hh, cc: (bb, cc, hh, 0))
+    y, s_out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, p), lambda bb, hh, cc: (hh, 0)),
+            pl.BlockSpec((1, 1, p, p), lambda bb, hh, cc: (bb, hh, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, 1, p, p), lambda bb, hh, cc: (bb, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc * ch, h, p), r.dtype),
+            jax.ShapeDtypeStruct((b, h, p, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, p), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(r, k, v, w, u, state)
+    return y[:, :s], s_out

@@ -1,0 +1,103 @@
+"""Pure-jnp oracle + chunked parallel form for the RWKV6 wkv recurrence.
+
+    y_t = r_t . (S + u * k_t v_t^T)
+    S   = diag(w_t) S + k_t v_t^T
+
+``wkv6_reference`` is the sequential oracle (scan over time). ``wkv6_chunked``
+is the GLA-style chunked form: with prefix decays P_t = prod_{tau<=t} w_tau,
+
+    y_t = (r_t*P_{t-1}) . S_in                       (inter-chunk, matmul)
+        + sum_{s<t} ((r_t*P_{t-1}).(k_s/P_s)) v_s    (intra-chunk, masked A @ V)
+        + ((r_t*u).k_t) v_t                          (bonus diagonal)
+    S_out = D(P_L) (S_in + (k/P)^T V)
+
+All L-length chunk terms become MXU matmuls; the sequential dependence drops
+from seq_len steps to seq_len/chunk state hops — this is the optimization
+that removes the 4096-step scan from the XLA-lowered rwkv6 train/prefill
+graphs (see EXPERIMENTS.md section Perf) and mirrors the Pallas kernel's
+blocking.
+
+Validity regime: the separable r*P / k/P factorization is exact while the
+per-chunk cumulative log-decay stays within +/-CLAMP (=60). With chunk=16
+that admits mean per-step decay down to w ~ e^-3.75 ~ 0.023 — far below
+anything a trained RWKV6 uses (w = exp(-exp(x)) with x ~ [-8, 1]). Beyond
+that, clamped terms mis-weight contributions that are themselves < e^-60.
+The sequential oracle remains the ground truth in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+CLAMP = 60.0
+
+
+def wkv6_chunked(r, k, v, w, u, state, chunk: int = 16):
+    """Same contract as wkv6_reference; r/k/v/w: (b,s,h,p) fp32, w in (0,1);
+    u: (h,p); state: (b,h,p,p). Returns (y, final_state)."""
+    b, s, h, p = r.shape
+    ch = min(chunk, s)
+    nc = -(-s // ch)
+    pad = nc * ch - s
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zf(r), zf(k), zf(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+
+    def cshape(a):
+        return a.reshape(b, nc, ch, h, p)
+
+    rc, kc, vc, wc = cshape(r), cshape(k), cshape(v), cshape(w)
+    logw = jnp.log(jnp.maximum(wc, 1e-38))
+    cum = jnp.cumsum(logw, axis=2)  # logP_t (within chunk)
+    excl = cum - logw  # logP_{t-1}
+    r_dec = rc * jnp.exp(jnp.clip(excl, -CLAMP, CLAMP))
+    k_dec = kc * jnp.exp(jnp.clip(-cum, -CLAMP, CLAMP))
+
+    # intra-chunk: A[t,s] = r_dec_t . k_dec_s, strictly causal
+    A = jnp.einsum("bclhp,bcmhp->bchlm", r_dec, k_dec)
+    mask = jnp.tril(jnp.ones((ch, ch), bool), k=-1)
+    A = jnp.where(mask[None, None, None], A, 0.0)
+    y = jnp.einsum("bchlm,bcmhq->bclhq", A, vc)
+    # bonus diagonal
+    d = jnp.einsum("bclhp,hp,bclhp->bclh", rc, u, kc)
+    y = y + d[..., None] * vc
+
+    # inter-chunk state recurrence (chunk states stay head-sharded: they are
+    # huge — (b, nc, h, p, p) — and must never be gathered)
+    from ...runtime.pspec import constrain
+
+    s_local = jnp.einsum("bclhp,bclhq->bchpq", k_dec, vc)  # (k/P)^T V
+    s_local = constrain(s_local, "wkv_state")
+    chunk_decay = jnp.exp(jnp.clip(cum[:, :, -1], -CLAMP, CLAMP))  # (b,nc,h,p)
+
+    def hop(S, inp):
+        s_loc, dec = inp  # (b,h,p,q), (b,h,p)
+        S_out = dec[..., None] * (S + s_loc)
+        return S_out, S  # emit state entering the chunk
+
+    Sf, S_in = jax.lax.scan(
+        hop, state,
+        (s_local.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+    )
+    S_in = constrain(S_in.swapaxes(0, 1), "wkv_state")  # (b,nc,h,p,q)
+    y = y + jnp.einsum("bclhp,bchpq->bclhq", r_dec, S_in)
+
+    y = y.reshape(b, nc * ch, h, p)[:, :s]
+    return y, Sf
+
+
+def wkv6_reference(r, k, v, w, u, state):
+    """r/k/v/w: (b, s, h, p) fp32 (w in (0,1)); u: (h, p); state: (b, h, p, p).
+    Returns (y: (b, s, h, p), final_state)."""
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # (b, h, p)
+        kv = jnp.einsum("bhp,bhq->bhpq", kt, vt)
+        y = jnp.einsum("bhp,bhpq->bhq", rt, S + u[None, :, :, None] * kv)
+        S = S * wt[..., None] + kv
+        return S, y
+
+    seq = tuple(a.swapaxes(0, 1) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, seq)
+    return ys.swapaxes(0, 1), state

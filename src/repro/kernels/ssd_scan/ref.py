@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the Mamba2 SSD scan: the *sequential* recurrence
+(ground truth for both the chunked jnp path and the Pallas kernel).
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t B_t x_t^T      (per head)
+    y_t = C_t . h_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_reference(xh, dt, A, B, C):
+    """xh: (b,s,H,P); dt: (b,s,H) > 0; A: (H,) < 0; B/C: (b,s,N).
+    Returns y: (b,s,H,P) fp32."""
+    b, s, H, P = xh.shape
+    N = B.shape[-1]
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp  # (b,H,P), (b,H), (b,N), (b,N)
+        decay = jnp.exp(dt_t * A[None, :])  # (b,H)
+        upd = jnp.einsum("bh,bn,bhp->bhnp", dt_t, B_t, x_t)
+        h = h * decay[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", C_t, h)
+        return h, y
+
+    h0 = jnp.zeros((b, H, N, P), jnp.float32)
+    seq = (
+        xh.swapaxes(0, 1).astype(jnp.float32),
+        dt.swapaxes(0, 1).astype(jnp.float32),
+        B.swapaxes(0, 1).astype(jnp.float32),
+        C.swapaxes(0, 1).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, h0, seq)
+    return ys.swapaxes(0, 1)

@@ -1,0 +1,262 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture x input shape) on
+# the production mesh (16x16 single-pod / 2x16x16 multi-pod), print
+# memory_analysis + cost_analysis, and derive the roofline terms from the
+# optimized HLO (launch.hlo_analysis).
+#
+# The XLA_FLAGS line above MUST stay the first statement: jax locks the
+# device count at first initialization.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch all --both-meshes --out results.json
+
+import argparse
+import json
+import time
+import traceback
+from dataclasses import asdict, dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import LM_SHAPES, all_configs, get_config
+from ..configs.base import ArchConfig, ShapeCfg
+from ..runtime.optimizer import AdamWConfig
+from ..runtime.serve import make_serve_step
+from ..runtime.sharding import make_policy
+from ..runtime.train import make_train_step
+from . import hlo_analysis, specs
+from .mesh import make_production_mesh
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+SHAPES = {s.name: s for s in LM_SHAPES}
+
+
+@dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    status: str  # ok | skipped | error
+    reason: str = ""
+    compile_s: float = 0.0
+    # memory analysis (per chip, bytes)
+    arg_bytes: int = 0
+    output_bytes: int = 0
+    temp_bytes: int = 0
+    # cost analysis (XLA, body-once per-shard)
+    xla_flops: float = 0.0
+    xla_bytes: float = 0.0
+    # hlo_analysis (per chip, trip-count scaled)
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_wire_bytes: float = 0.0
+    collective_by_type: dict = field(default_factory=dict)
+    n_collectives: int = 0
+    unknown_trip_loops: int = 0
+    # roofline terms (seconds, per chip)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    model_flops_per_chip: float = 0.0
+    useful_ratio: float = 0.0
+
+
+def model_flops_per_chip(cfg: ArchConfig, shape: ShapeCfg, n_chips: int) -> float:
+    """6*N_active*D for training, 2*N_active*D for inference forward; decode
+    counts one token per sequence."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / n_chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / n_chips
+    tokens = shape.global_batch  # one new token per sequence
+    # decode also re-reads the KV cache: attention flops ~ 2*2*L*kv*hd*S per tok
+    attn = 4.0 * cfg.num_layers * cfg.num_kv_heads * cfg.resolved_head_dim * shape.seq_len
+    return (2.0 * n_active + attn) * tokens / n_chips
+
+
+def _build_lowerable(cfg: ArchConfig, shape: ShapeCfg, mesh, policy):
+    """Returns (fn, args) ready for jax.jit(...).lower(*args)."""
+    p_specs = specs.params_specs(cfg)
+    p_shard = policy.params_sharding(p_specs)
+
+    if shape.kind == "train":
+        opt_big = cfg.param_count() * 2 / 256 > (2 << 30)
+        opt_cfg = AdamWConfig(moment_dtype=jnp.bfloat16 if opt_big else jnp.float32)
+        o_specs = specs.opt_state_specs(cfg, opt_cfg)
+        o_shard = jax.tree.map(
+            lambda s: s, policy.params_sharding(o_specs["m"])
+        )
+        opt_shard = {
+            "step": jax.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            "m": o_shard,
+            "v": policy.params_sharding(o_specs["v"]),
+        }
+        batch = dict(specs.input_specs(cfg, shape))
+        b_shard = policy.inputs_sharding(batch)
+        step = make_train_step(cfg, policy, opt_cfg, remat=True, microbatch=1)
+        fn = jax.jit(
+            step,
+            in_shardings=(p_shard, opt_shard, b_shard),
+            out_shardings=(p_shard, opt_shard, None),
+            donate_argnums=(0, 1),
+        )
+        return fn, (p_specs, o_specs, batch)
+
+    if shape.kind == "prefill":
+        from ..runtime.serve import make_prefill
+
+        batch = specs.input_specs(cfg, shape)
+        b_shard = policy.inputs_sharding(batch)
+        fn = jax.jit(
+            make_prefill(cfg, policy),
+            in_shardings=(p_shard, b_shard),
+            out_shardings=None,
+        )
+        return fn, (p_specs, batch)
+
+    # decode
+    c_specs = specs.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    c_shard = policy.cache_sharding(c_specs)
+    batch = specs.decode_input_specs(cfg, shape)
+    b_shard = policy.inputs_sharding(batch)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = jax.jit(
+        make_serve_step(cfg, policy),
+        in_shardings=(p_shard, c_shard, b_shard, jax.NamedSharding(mesh, jax.sharding.PartitionSpec())),
+        out_shardings=None,
+        donate_argnums=(1,),
+    )
+    return fn, (p_specs, c_specs, batch, pos)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             verbose: bool = True, keep_text: bool = False) -> CellResult:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    res = CellResult(arch=arch, shape=shape_name, mesh=mesh_name, status="ok")
+
+    if shape.name == "long_500k" and not cfg.supports_long:
+        res.status = "skipped"
+        res.reason = "pure full attention: 500k decode KV is unbounded (DESIGN.md)"
+        return res
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    policy = make_policy(cfg, mesh)
+
+    t0 = time.time()
+    try:
+        with mesh:
+            fn, args = _build_lowerable(cfg, shape, mesh, policy)
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+    except Exception as e:
+        res.status = "error"
+        res.reason = f"{type(e).__name__}: {e}"[:500]
+        if verbose:
+            traceback.print_exc()
+        return res
+    res.compile_s = time.time() - t0
+
+    try:
+        mem = compiled.memory_analysis()
+        res.arg_bytes = int(mem.argument_size_in_bytes)
+        res.output_bytes = int(mem.output_size_in_bytes)
+        res.temp_bytes = int(mem.temp_size_in_bytes)
+    except Exception:
+        pass
+    try:
+        ca = compiled.cost_analysis() or {}
+        res.xla_flops = float(ca.get("flops", 0.0))
+        res.xla_bytes = float(ca.get("bytes accessed", 0.0))
+    except Exception:
+        pass
+
+    text = compiled.as_text()
+    counts = hlo_analysis.analyze(text, default_group=mesh.shape["model"])
+    res.flops = counts.flops
+    res.hbm_bytes = counts.hbm_bytes
+    res.collective_wire_bytes = counts.collective_wire_bytes
+    res.collective_by_type = dict(counts.collective_bytes_by_type)
+    res.n_collectives = counts.collective_ops
+    res.unknown_trip_loops = counts.unknown_trip_loops
+
+    res.t_compute = counts.flops / PEAK_FLOPS
+    res.t_memory = counts.hbm_bytes / HBM_BW
+    res.t_collective = counts.collective_wire_bytes / ICI_BW
+    terms = {
+        "compute": res.t_compute,
+        "memory": res.t_memory,
+        "collective": res.t_collective,
+    }
+    res.bottleneck = max(terms, key=terms.get)
+    res.model_flops_per_chip = model_flops_per_chip(cfg, shape, n_chips)
+    res.useful_ratio = (
+        res.model_flops_per_chip / res.flops if res.flops else 0.0
+    )
+
+    if verbose:
+        print(
+            f"[{mesh_name}] {arch} x {shape_name}: compile {res.compile_s:.1f}s | "
+            f"args {res.arg_bytes/2**30:.2f} GiB temp {res.temp_bytes/2**30:.2f} GiB | "
+            f"flops/chip {res.flops:.3e} | hbm {res.hbm_bytes:.3e} B | "
+            f"wire {res.collective_wire_bytes:.3e} B | "
+            f"terms c/m/x = {res.t_compute*1e3:.2f}/{res.t_memory*1e3:.2f}/"
+            f"{res.t_collective*1e3:.2f} ms -> {res.bottleneck} | "
+            f"useful {res.useful_ratio:.2f}"
+        )
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    archs = sorted(all_configs()) if args.arch == "all" else [args.arch]
+    shape_names = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for mp in meshes:
+        for arch in archs:
+            for sn in shape_names:
+                results.append(run_cell(arch, sn, multi_pod=mp))
+
+    ok = sum(1 for r in results if r.status == "ok")
+    sk = sum(1 for r in results if r.status == "skipped")
+    er = sum(1 for r in results if r.status == "error")
+    print(f"\n== dry-run summary: {ok} ok, {sk} skipped, {er} errors ==")
+    for r in results:
+        if r.status == "error":
+            print(f"  ERROR {r.mesh} {r.arch} x {r.shape}: {r.reason}")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump([asdict(r) for r in results], f, indent=1)
+        print(f"wrote {args.out}")
+
+    if er:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,341 @@
+"""Optimized-HLO text analyzer for the roofline terms.
+
+``compiled.cost_analysis()`` counts every computation ONCE (while bodies are
+not multiplied by trip count) and reports post-SPMD per-shard numbers. For
+scan-over-layers models that under-counts by ~num_layers, so we parse
+``compiled.as_text()`` ourselves:
+
+  * build the computation call graph (while/call/conditional/fusion),
+  * multiply op costs by the product of enclosing ``known_trip_count``s
+    (XLA annotates statically-known while trip counts after optimization),
+  * FLOPs: dot ops = 2 * prod(output) * prod(contracting dims)
+           (+ convolution support for the CNN path),
+  * HBM bytes: per top-level op, operands + outputs (fusion internals stay
+    in registers/VMEM, so fusion boundaries approximate HBM traffic),
+  * collective bytes: per op type, wire-byte factors on the shard bytes
+    (ring model: AG/RS (n-1)/n, AR 2(n-1)/n, A2A (n-1)/n, permute 1).
+
+All quantities are PER CHIP (the HLO is the per-shard program).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id", "replica-id",
+    "iota",
+}
+
+# type may be a tuple containing layouts and /*index=N*/ comments; lazily
+# consume everything up to the first " opcode(" token (tuple types never
+# contain a word directly followed by an open paren).
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<type>.*?)\s+"
+    r"(?P<opcode>[\w\-]+)\((?P<rest>.*)$"
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+_CALLED_RE = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+
+
+def _parse_shapes(type_str: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    return sum(
+        DTYPE_BYTES[dt] * int(math.prod(shape)) for dt, shape in _parse_shapes(type_str)
+    )
+
+
+@dataclass
+class HloOp:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operands + attributes tail
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list[HloOp] = field(default_factory=list)
+
+
+@dataclass
+class RooflineCounts:
+    """Per-chip counts.
+
+    ``hbm_bytes`` uses producer-side accounting: every op's *output* bytes,
+    trip-count scaled (each tensor is written once and read >=1 times; we
+    count the write — a lower bound on traffic that avoids double counting.
+    Add the compiled argument bytes once for parameter reads). CPU HLO is
+    less fused than TPU HLO, so this is still an upper bound on a real TPU's
+    traffic wherever Pallas kernels (flash attention, SSD) keep
+    intermediates in VMEM."""
+
+    flops: float = 0.0
+    dot_flops: float = 0.0
+    conv_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_wire_bytes: float = 0.0
+    collective_bytes_by_type: dict = field(default_factory=lambda: defaultdict(float))
+    collective_ops: int = 0
+    dots: int = 0
+    unknown_trip_loops: int = 0
+    top_collectives: list = field(default_factory=list)  # (wire_bytes, descr)
+    top_hbm_ops: list = field(default_factory=list)  # (bytes, descr)
+
+
+def parse_module(text: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    current: Computation | None = None
+    entry = ""
+    for line in text.splitlines():
+        m = _COMP_START_RE.match(line.strip()) if line and not line.startswith(" ") else None
+        if line.startswith("ENTRY") or (line and not line[0].isspace() and "->" in line and line.rstrip().endswith("{")):
+            m2 = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", line.strip())
+            if m2:
+                current = Computation(m2.group(1))
+                comps[current.name] = current
+                if line.startswith("ENTRY"):
+                    entry = current.name
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        om = _OP_RE.match(line)
+        if om:
+            current.ops.append(
+                HloOp(om.group("name"), om.group("type"), om.group("opcode"), om.group("rest"))
+            )
+    if not entry and comps:
+        # fall back: computation containing the most ops
+        entry = max(comps, key=lambda c: len(comps[c].ops))
+    return comps, entry
+
+
+def _dot_flops(op: HloOp, shapes: dict[str, str]) -> float:
+    out_elems = sum(int(math.prod(s)) for _, s in _parse_shapes(op.type_str))
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    operands = re.findall(r"%([\w.\-]+)", op.rest)
+    if not m or not operands:
+        return 2.0 * out_elems  # degenerate
+    lhs_shape = None
+    lhs_type = shapes.get(operands[0])
+    if lhs_type:
+        parsed = _parse_shapes(lhs_type)
+        if parsed:
+            lhs_shape = parsed[0][1]
+    if lhs_shape is None:
+        return 2.0 * out_elems
+    cdims = [int(d) for d in m.group(1).split(",") if d]
+    k = int(math.prod(lhs_shape[d] for d in cdims)) if cdims else 1
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: HloOp, shapes: dict[str, str]) -> float:
+    out_elems = sum(int(math.prod(s)) for _, s in _parse_shapes(op.type_str))
+    operands = re.findall(r"%([\w.\-]+)", op.rest)
+    if len(operands) < 2:
+        return 2.0 * out_elems
+    rhs_type = shapes.get(operands[1], "")
+    parsed = _parse_shapes(rhs_type)
+    if not parsed:
+        return 2.0 * out_elems
+    kernel_elems = int(math.prod(parsed[0][1]))
+    out_ch = parsed[0][1][-1] if parsed[0][1] else 1
+    per_out = kernel_elems / max(out_ch, 1)
+    return 2.0 * out_elems * per_out
+
+
+def _dus_update_bytes(comp: "Computation | None", shapes: dict[str, str]) -> float | None:
+    """If the fusion's root is a dynamic-update-slice (possibly wrapped in
+    convert/copy — XLA:CPU upcasts bf16 around dots), return the update
+    operand's byte count: the real write traffic of the aliased buffer."""
+    if comp is None or not comp.ops:
+        return None
+    by_name = {op.name: op for op in comp.ops}
+    root = comp.ops[-1]
+    hops = 0
+    while root.opcode in ("convert", "copy", "bitcast") and hops < 4:
+        operands = re.findall(r"%([\w.\-]+)", root.rest.split(")")[0])
+        if not operands or operands[0] not in by_name:
+            return None
+        root = by_name[operands[0]]
+        hops += 1
+    if root.opcode != "dynamic-update-slice":
+        return None
+    operands = re.findall(r"%([\w.\-]+)", root.rest.split(")")[0])
+    if len(operands) < 2:
+        return None
+    upd = shapes.get(operands[1])
+    return _nbytes(upd) if upd else None
+
+
+def _group_size(op: HloOp, default: int) -> int:
+    m = _GROUPS_RE.search(op.rest)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(op.rest)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        n = len([x for x in first.split(",") if x.strip() != ""])
+        return max(n, 1)
+    return default
+
+
+_WIRE_FACTOR = {
+    "all-gather": lambda n: (n - 1) / n,
+    "reduce-scatter": lambda n: (n - 1) / n,
+    "all-reduce": lambda n: 2 * (n - 1) / n,
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+
+def analyze(text: str, *, default_group: int = 16) -> RooflineCounts:
+    comps, entry = parse_module(text)
+    shapes: dict[str, str] = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            shapes[op.name] = op.type_str
+
+    counts = RooflineCounts()
+    visited_stack: list[str] = []
+
+    def visit(comp_name: str, mult: float, count_bytes: bool) -> None:
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in visited_stack:
+            return
+        visited_stack.append(comp_name)
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                tm = _TRIP_RE.search(op.rest)
+                trip = int(tm.group(1)) if tm else 1
+                if not tm:
+                    counts.unknown_trip_loops += 1
+                called = _CALLED_RE.search(op.rest)
+                cond = _COND_RE.search(op.rest)
+                if called:
+                    visit(called.group(1), mult * trip, count_bytes)
+                if cond:
+                    visit(cond.group(1), mult * trip, count_bytes)
+                continue
+            if oc == "conditional":
+                bm = _BRANCHES_RE.search(op.rest)
+                if bm:
+                    branches = re.findall(r"%?([\w.\-]+)", bm.group(1))
+                    for b in branches[:1]:  # count one branch (max would be fairer; they're usually similar)
+                        visit(b, mult, count_bytes)
+                continue
+            if oc in ("call", "async-start", "async-done"):
+                called = _CALLED_RE.search(op.rest)
+                if called:
+                    visit(called.group(1), mult, count_bytes)
+                continue
+            if oc == "fusion":
+                called = _CALLED_RE.search(op.rest)
+                if called:
+                    visit(called.group(1), mult, count_bytes=False)  # flops only
+                if count_bytes:
+                    out_b = _nbytes(op.type_str)
+                    # in-place dynamic-update-slice fusions alias their
+                    # operand buffer: actual HBM writes = the update slice,
+                    # not the whole (e.g. KV-cache) array.
+                    if called:
+                        dus = _dus_update_bytes(comps.get(called.group(1)), shapes)
+                        if dus is not None:
+                            out_b = dus
+                    b = mult * out_b
+                    counts.hbm_bytes += b
+                    if b > (1 << 28):
+                        counts.top_hbm_ops.append((b, f"fusion x{mult:g} {op.type_str[:72]}"))
+                continue
+            if oc == "dynamic-update-slice":
+                if count_bytes:
+                    ops_names = re.findall(r"%([\w.\-]+)", op.rest.split(")")[0])
+                    upd = _nbytes(shapes.get(ops_names[1], "")) if len(ops_names) > 1 else 0
+                    counts.hbm_bytes += mult * (upd or _nbytes(op.type_str))
+                continue
+            base = oc.removesuffix("-start").removesuffix("-done")
+            if base in COLLECTIVES:
+                if not oc.endswith("-done"):
+                    data = _nbytes(op.type_str)
+                    n = _group_size(op, default_group)
+                    wire = _WIRE_FACTOR[base](max(n, 2)) * data
+                    counts.collective_wire_bytes += mult * wire
+                    counts.collective_bytes_by_type[base] += mult * data
+                    counts.collective_ops += 1
+                    counts.top_collectives.append(
+                        (mult * wire, f"{base} x{mult:g} {op.type_str[:72]}")
+                    )
+                if count_bytes:
+                    counts.hbm_bytes += mult * _nbytes(op.type_str)
+                continue
+            if oc == "dot":
+                f = _dot_flops(op, shapes)
+                counts.flops += mult * f
+                counts.dot_flops += mult * f
+                counts.dots += 1
+                if count_bytes:
+                    counts.hbm_bytes += mult * _nbytes(op.type_str)
+                continue
+            if oc == "convolution":
+                f = _conv_flops(op, shapes)
+                counts.flops += mult * f
+                counts.conv_flops += mult * f
+                if count_bytes:
+                    counts.hbm_bytes += mult * _nbytes(op.type_str)
+                continue
+            if count_bytes and oc not in _SKIP_BYTES:
+                b = mult * _nbytes(op.type_str)
+                counts.hbm_bytes += b
+                if b > (1 << 28):
+                    counts.top_hbm_ops.append((b, f"{oc} x{mult:g} {op.type_str[:72]}"))
+        visited_stack.pop()
+
+    def _op_io_bytes(op: HloOp, shapes: dict[str, str]) -> float:
+        out = _nbytes(op.type_str)
+        inp = 0
+        for operand in re.findall(r"%([\w.\-]+)", op.rest.split(")")[0]):
+            t = shapes.get(operand)
+            if t:
+                inp += _nbytes(t)
+        return float(out + inp)
+
+    visit(entry, 1.0, True)
+    counts.top_collectives = sorted(counts.top_collectives, reverse=True)[:8]
+    counts.top_hbm_ops = sorted(counts.top_hbm_ops, reverse=True)[:8]
+    return counts

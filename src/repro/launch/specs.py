@@ -1,0 +1,55 @@
+"""ShapeDtypeStruct stand-ins for every model input / state — weak-type
+correct, shardable, zero device allocation. The dry-run lowers against these.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeCfg
+from ..models import transformer as tf
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeCfg, *, act_dtype=jnp.bfloat16) -> dict:
+    """Inputs for train_step (train_*) or prefill (prefill_*)."""
+    B, S = shape.global_batch, shape.seq_len
+    batch: dict[str, Any] = {}
+    if cfg.frontend == "frame_embed":
+        batch["frame_embeds"] = _sds((B, S, cfg.d_model), act_dtype)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+        if cfg.frontend == "patch_embed":
+            batch["patch_embeds"] = _sds((B, cfg.n_prefix_embeds, cfg.d_model), act_dtype)
+    if shape.kind == "train":
+        batch["labels"] = _sds((B, S), jnp.int32)
+    return batch
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeCfg, *, act_dtype=jnp.bfloat16) -> dict:
+    """One-new-token inputs for serve_step at a KV/state cache of seq_len."""
+    B = shape.global_batch
+    if cfg.frontend == "frame_embed":
+        return {"frame_embeds": _sds((B, 1, cfg.d_model), act_dtype)}
+    return {"tokens": _sds((B, 1), jnp.int32)}
+
+
+def params_specs(cfg: ArchConfig, *, dtype=jnp.bfloat16) -> Any:
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(lambda: tf.init_params(cfg, jax.random.PRNGKey(0), dtype))
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int, *, dtype=jnp.bfloat16) -> Any:
+    return jax.eval_shape(lambda: tf.init_cache(cfg, batch, max_len, dtype))
+
+
+def opt_state_specs(cfg: ArchConfig, opt_cfg, *, dtype=jnp.bfloat16) -> Any:
+    from ..runtime.optimizer import adamw_init
+
+    p = params_specs(cfg, dtype=dtype)
+    return jax.eval_shape(lambda pp: adamw_init(opt_cfg, pp), p)

@@ -1,0 +1,113 @@
+"""Grouped-query attention: full / sliding-window / local-global, optional
+qk-norm, RoPE; prefill (full-sequence) and single-token decode paths.
+
+The full-sequence path routes through ``repro.kernels.flash_attention.ops``
+which dispatches to the Pallas TPU kernel on TPU and the pure-jnp reference
+elsewhere (so CPU dry-runs and tests always lower).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..runtime.pspec import constrain
+from .layers import apply_rope, normal, rmsnorm
+
+
+def init_attn(key, cfg: ArchConfig, dtype) -> dict:
+    d, H, G, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": normal(k1, (d, H, hd), s, dtype),
+        "wk": normal(k2, (d, G, hd), s, dtype),
+        "wv": normal(k3, (d, G, hd), s, dtype),
+        "wo": normal(k4, (H, hd, d), 1.0 / math.sqrt(H * hd), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _project_qkv(p: dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array):
+    q = jnp.einsum("bsd,dhq->bshq", x, p["wq"])
+    k = jnp.einsum("bsd,dgq->bsgq", x, p["wk"])
+    v = jnp.einsum("bsd,dgq->bsgq", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def full_attention(
+    p: dict,
+    cfg: ArchConfig,
+    x: jax.Array,
+    *,
+    local: bool,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Causal (optionally windowed) self-attention over the full sequence."""
+    from ..kernels.flash_attention import ops as flash
+
+    b, s, d = x.shape
+    H, G, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    q = constrain(q, "attn_q")
+    w = (window or cfg.window) if local else None
+    out = flash.flash_attention(q, k, v, causal=True, window=w)
+    out = constrain(out, "attn_out")
+    return jnp.einsum("bshq,hqd->bsd", out, p["wo"])
+
+
+# ------------------------------------------------------------- decode path --
+def init_kv_cache(cfg: ArchConfig, n_layers: int, batch: int, length: int, dtype) -> dict:
+    G, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (n_layers, batch, length, G, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(
+    p: dict,
+    cfg: ArchConfig,
+    x: jax.Array,  # (b, 1, d)
+    layer_cache: dict,  # {"k": (b, S, g, q), "v": ...} single layer slice
+    pos: jax.Array,  # scalar int32 current position
+    *,
+    local: bool,
+) -> tuple[jax.Array, dict]:
+    b = x.shape[0]
+    H, G, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    cache_len = layer_cache["k"].shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, cfg, x, positions)  # q:(b,1,H,hd) k/v:(b,1,G,hd)
+
+    # ring-buffer slot for windowed layers; plain slot otherwise
+    slot = jnp.where(jnp.array(local), pos % cache_len, jnp.minimum(pos, cache_len - 1))
+    ck = jax.lax.dynamic_update_slice(layer_cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(layer_cache["v"], v, (0, slot, 0, 0))
+
+    from ..kernels.flash_attention.ref import repeat_kv
+
+    kr = repeat_kv(ck, H // G)  # (b, t, H, hd); broadcast fuses, no copy
+    vr = repeat_kv(cv, H // G)
+    # preferred_element_type keeps the cache operand bf16 (an .astype(f32)
+    # on the output makes XLA materialize an f32 copy of the whole cache)
+    scores = jnp.einsum("buhq,bthq->bhut", q, kr,
+                        preferred_element_type=jnp.float32)
+    scores = constrain(scores, "decode_scores")  # t-sharded (flash-decoding)
+    scores *= 1.0 / math.sqrt(hd)
+    valid = jnp.arange(cache_len)[None, :] <= jnp.minimum(pos, cache_len - 1)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bhut,bthq->buhq", probs, vr)
+    y = jnp.einsum("bshq,hqd->bsd", out, p["wo"])
+    return y, {"k": ck, "v": cv}

@@ -1,0 +1,106 @@
+"""Shared layer primitives: norms, RoPE, MLPs, initializers.
+
+Conventions:
+  * params are nested dicts of jnp arrays; per-layer stacks carry a leading
+    layer axis and are consumed by jax.lax.scan;
+  * compute dtype is bf16 (configurable), norm/softmax statistics in fp32;
+  * einsum dim letters: b=batch s/t=seq d=d_model h=q-heads g=kv-heads
+    q=head_dim f=d_ff e=experts c=capacity v=vocab.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+        "sqrelu": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+# ----------------------------------------------------------------- RoPE ----
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ MLPs ----
+def init_mlp(key, d: int, f: int, kind: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {"w_out": normal(k2, (f, d), s_out, dtype)}
+    if kind in ("swiglu", "geglu"):
+        p["w_in"] = normal(k1, (d, f), s_in, dtype)
+        p["w_gate"] = normal(k3, (d, f), s_in, dtype)
+    else:  # dense
+        p["w_in"] = normal(k1, (d, f), s_in, dtype)
+    return p
+
+
+def mlp(p: dict, x: jax.Array, kind: str, act: str) -> jax.Array:
+    from ..runtime.pspec import constrain
+
+    a = act_fn("silu" if kind == "swiglu" else act)
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    if kind in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = a(g) * h
+    else:
+        h = a(h)
+    h = constrain(h, "ffn_hidden")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+
+
+# ------------------------------------------------------------- embedding ----
+def init_embedding(key, vocab: int, d: int, dtype) -> jax.Array:
+    return normal(key, (vocab, d), 1.0, dtype)
+
+
+def embed(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table_or_head: jax.Array, x: jax.Array, tied: bool) -> jax.Array:
+    from ..runtime.pspec import constrain
+
+    if tied:
+        logits = jnp.einsum("bsd,vd->bsv", x, table_or_head)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, table_or_head)
+    return constrain(logits, "logits")

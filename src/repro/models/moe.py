@@ -1,0 +1,96 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-factor dispatch
+(GShard/Switch style einsum dispatch — sharding-friendly under pjit; the
+expert dimension shards for expert parallelism, d_ff for tensor parallelism).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..runtime.pspec import constrain
+from .layers import act_fn, normal
+
+
+def init_moe(key, cfg: ArchConfig, dtype) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {
+        "router": normal(k1, (d, E), s_in, jnp.float32),
+        "w_in": normal(k2, (E, d, f), s_in, dtype),
+        "w_out": normal(k3, (E, f, d), s_out, dtype),
+    }
+    if cfg.mlp in ("swiglu", "geglu"):
+        p["w_gate"] = normal(k4, (E, d, f), s_in, dtype)
+    return p
+
+
+def _capacity(cfg: ArchConfig, group_len: int) -> int:
+    c = int(math.ceil(group_len * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    return max(4, min(group_len, c))
+
+
+def moe_mlp(p: dict, cfg: ArchConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (b, s, d) -> (y, aux_loss). Tokens are regrouped to bounded-size
+    dispatch groups so the one-hot dispatch einsum stays O(group_len^2)."""
+    b, s, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    tokens = x.reshape(b * s, d)
+    n = tokens.shape[0]
+    gl = min(cfg.moe_group, n)
+    n_groups = max(1, n // gl)
+    gl = n // n_groups  # exact division (shapes here are powers of two)
+    xt = tokens[: n_groups * gl].reshape(n_groups, gl, d)
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k gates, normalized over the selected experts
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # (g, t, K)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+
+    C = _capacity(cfg, gl)
+    # position of each (token, k) within its expert queue
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (g,t,K,E)
+    flatoh = onehot.reshape(n_groups, gl * K, E)
+    pos_in_e = (jnp.cumsum(flatoh, axis=1) - flatoh).reshape(n_groups, gl, K, E)
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)  # (g,t,K)
+    keep = pos < C
+    gate_vals = gate_vals * keep
+
+    # dispatch/combine tensors — kept in the activation dtype: an f32
+    # combine promotes the whole capacity-expanded expert path to f32 and
+    # doubles the row-parallel all-reduce bytes (measured on grok-1)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32) * keep[..., None]  # (g,t,K,C)
+    combine = jnp.einsum("gtk,gtke,gtkc->gtec", gate_vals, onehot, pos_oh).astype(x.dtype)
+    dispatch = (combine > 0).astype(x.dtype)
+    dispatch = constrain(dispatch, "moe_dispatch")
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xt)  # (g,E,C,d)
+    xe = constrain(xe, "moe_expert_in")
+    h = jnp.einsum("gecd,edf->gecf", xe, p["w_in"])
+    if "w_gate" in p:
+        gt = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
+        h = act_fn("silu" if cfg.mlp == "swiglu" else cfg.act)(gt) * h
+    else:
+        h = act_fn(cfg.act)(h)
+    h = constrain(h, "moe_hidden")
+    # NOTE(perf): constraining ye to d-sharded (hoping for a reduce-scatter
+    # lowering of the row-parallel partial sum) was measured 7% WORSE on
+    # grok-1 — XLA adds a resharding for the combine einsum instead
+    # (EXPERIMENTS.md §Perf, grok iteration 2: refuted).
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_out"])
+    y = jnp.einsum("gtec,gecd->gtd", combine, ye)
+
+    # load-balancing auxiliary loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(onehot[:, :, 0, :], axis=1)  # top-1 assignment fraction
+    pe = jnp.mean(probs, axis=1)
+    aux = E * jnp.mean(jnp.sum(me * pe, axis=-1))
+
+    y = y.reshape(n_groups * gl, d)
+    if n_groups * gl < n:  # ragged tail (shouldn't occur at our shapes)
+        y = jnp.concatenate([y, tokens[n_groups * gl:]], axis=0)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,125 @@
+"""RWKV-6 "Finch" block [arXiv:2404.05892]: attention-free time-mix with
+data-dependent decay (low-rank dynamic lerp + decay LoRA) and squared-ReLU
+channel-mix. Sequential recurrence is the reference semantics; the chunked
+Pallas kernel (repro.kernels.rwkv6) computes the same recurrence blockwise.
+
+State per layer: token-shift registers (last hidden) for time/channel mix +
+the (heads, dk, dv) wkv matrix state -> O(1) decode memory (long_500k runs).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..runtime.pspec import constrain
+from .layers import normal
+
+LORA_R = 32  # low-rank dim for the dynamic mix / decay projections
+
+
+def init_rwkv(key, cfg: ArchConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    H = d // cfg.ssm_head_dim
+    ks = jax.random.split(key, 16)
+    s = 1.0 / math.sqrt(d)
+    return {
+        # time-mix
+        "mu_x": jnp.full((d,), 0.5, dtype),
+        "mu": normal(ks[0], (5, d), 0.1, dtype),  # r,k,v,w,g static mix
+        "A_mix": normal(ks[1], (d, 5 * LORA_R), s, dtype),
+        "B_mix": normal(ks[2], (5, LORA_R, d), 0.05, dtype),
+        "w0": normal(ks[3], (d,), 0.5, jnp.float32),
+        "A_w": normal(ks[4], (d, LORA_R), s, dtype),
+        "B_w": normal(ks[5], (LORA_R, d), 0.05, dtype),
+        "u": normal(ks[6], (d,), 0.5, jnp.float32),  # bonus for current token
+        "Wr": normal(ks[7], (d, d), s, dtype),
+        "Wk": normal(ks[8], (d, d), s, dtype),
+        "Wv": normal(ks[9], (d, d), s, dtype),
+        "Wg": normal(ks[10], (d, d), s, dtype),
+        "Wo": normal(ks[11], (d, d), s, dtype),
+        "ln_x": jnp.ones((d,), jnp.float32),  # per-head group norm scale
+        # channel-mix
+        "cm_mu_r": jnp.full((d,), 0.5, dtype),
+        "cm_mu_k": jnp.full((d,), 0.5, dtype),
+        "cm_Wr": normal(ks[12], (d, d), s, dtype),
+        "cm_Wk": normal(ks[13], (d, f), s, dtype),
+        "cm_Wv": normal(ks[14], (f, d), 1.0 / math.sqrt(f), dtype),
+    }
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent token-shift mixing -> r,k,v,w,g inputs (RWKV6)."""
+    dx = xx - x
+    xxx = x + dx * p["mu_x"]
+    lora = jnp.tanh(jnp.einsum("...d,dr->...r", xxx, p["A_mix"]))
+    lora = lora.reshape(*lora.shape[:-1], 5, LORA_R)
+    dyn = jnp.einsum("...er,erd->...ed", lora, p["B_mix"])  # (...,5,d)
+    mixed = x[..., None, :] + dx[..., None, :] * (p["mu"] + dyn)
+    return [mixed[..., i, :] for i in range(5)]
+
+
+def _decay(p, xw):
+    lw = jnp.einsum("...d,dr->...r", xw, p["A_w"])
+    w = p["w0"] + jnp.einsum("...r,rd->...d", jnp.tanh(lw), p["B_w"]).astype(jnp.float32)
+    return jnp.exp(-jnp.exp(w))  # in (0, 1), data-dependent per channel
+
+
+def _group_norm(y, scale, H, eps=64e-5):
+    """Head-wise normalization of the wkv output."""
+    b = y.shape[0]
+    yh = y.reshape(*y.shape[:-1], H, -1).astype(jnp.float32)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(y.shape) * scale).astype(y.dtype)
+
+
+def rwkv_time_mix(p: dict, cfg: ArchConfig, x: jax.Array, shift: jax.Array,
+                  state: jax.Array):
+    """x: (b,s,d); shift: (b,d) last token of the previous call;
+    state: (b,H,P,P). Returns (y, new_shift, new_state)."""
+    b, s, d = x.shape
+    H = d // cfg.ssm_head_dim
+    P = cfg.ssm_head_dim
+    xx = jnp.concatenate([shift[:, None, :], x[:, :-1, :]], axis=1)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xx)
+    r = jnp.einsum("bsd,de->bse", xr, p["Wr"]).reshape(b, s, H, P)
+    k = jnp.einsum("bsd,de->bse", xk, p["Wk"]).reshape(b, s, H, P)
+    v = jnp.einsum("bsd,de->bse", xv, p["Wv"]).reshape(b, s, H, P)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["Wg"]))
+    w = _decay(p, xw).reshape(b, s, H, P)
+    u = p["u"].reshape(H, P)
+
+    from ..kernels.rwkv6 import ops as wkv_ops
+
+    r32, k32, v32 = (constrain(a.astype(jnp.float32), "ssm_x") for a in (r, k, v))
+    y, new_state = wkv_ops.wkv6(r32, k32, v32, w, u, state)
+    y = constrain(y, "ssm_x").reshape(b, s, d)
+    y = _group_norm(y, p["ln_x"], H).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y * g, p["Wo"])
+    return out, x[:, -1, :], new_state
+
+
+def rwkv_channel_mix(p: dict, cfg: ArchConfig, x: jax.Array, shift: jax.Array):
+    xx = jnp.concatenate([shift[:, None, :], x[:, :-1, :]], axis=1)
+    xr = x + (xx - x) * p["cm_mu_r"]
+    xk = x + (xx - x) * p["cm_mu_k"]
+    kk = jnp.einsum("bsd,df->bsf", xk, p["cm_Wk"])
+    kk = jnp.square(jax.nn.relu(kk))
+    kk = constrain(kk, "ffn_hidden")
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["cm_Wv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm_Wr"]))
+    return rr * vv, x[:, -1, :]
+
+
+def init_rwkv_cache(cfg: ArchConfig, n_layers: int, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    H, P = d // cfg.ssm_head_dim, cfg.ssm_head_dim
+    return {
+        "shift_tm": jnp.zeros((n_layers, batch, d), dtype),
+        "shift_cm": jnp.zeros((n_layers, batch, d), dtype),
+        "wkv": jnp.zeros((n_layers, batch, H, P, P), jnp.float32),
+    }

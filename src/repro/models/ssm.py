@@ -1,0 +1,174 @@
+"""Mamba2 (SSD — state-space duality) block: chunked parallel scan for
+training/prefill, O(1) recurrent state for decode.
+
+Follows Mamba-2 [arXiv:2405.21060]: per-head scalar decay A, input-dependent
+dt (softplus), shared B/C of size ``ssm_state``, depthwise conv on (x, B, C),
+gated output. The chunked SSD propagates inter-chunk state h with per-chunk
+decays; ``repro.kernels.ssd_scan`` provides the Pallas TPU kernel and this
+module's chunked jnp path is its reference semantics.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..runtime.pspec import constrain
+from .layers import normal, rmsnorm
+
+
+def init_mamba(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    conv_dim = di + 2 * N
+    return {
+        # in_proj -> [z (di), x (di), B (N), C (N), dt (H)]
+        "w_in": normal(ks[0], (d, 2 * di + 2 * N + H), s, dtype),
+        "conv_w": normal(ks[1], (cfg.ssm_conv, conv_dim), 0.5, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": normal(ks[2], (H,), 0.5, jnp.float32),  # A = -exp(A_log)
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "gate_norm": jnp.zeros((di,), dtype),
+        "w_out": normal(ks[3], (di, d), 1.0 / math.sqrt(di), dtype),
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj: jax.Array):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * N]
+    dt = proj[..., di + di + 2 * N :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq: xbc (b, s, c), w (k, c)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(xh, dt, A, B, C, chunk: int = 128):
+    """Chunked SSD scan (pure jnp reference; kernels/ssd_scan mirrors it).
+
+    xh: (b, s, H, P) inputs; dt: (b, s, H) positive step sizes;
+    A: (H,) negative decay rates; B, C: (b, s, N).
+    Returns y: (b, s, H, P).
+    """
+    b, s, H, P = xh.shape
+    N = B.shape[-1]
+    if s % chunk:
+        pad = chunk - s % chunk
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    S = xh.shape[1]
+    nc = S // chunk
+    xc = xh.reshape(b, nc, chunk, H, P)
+    dtc = dt.reshape(b, nc, chunk, H)
+    Bc = B.reshape(b, nc, chunk, N)
+    Cc = C.reshape(b, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]  # (b,nc,l,H) negative increments
+    cums = jnp.cumsum(dA, axis=2)  # within-chunk cumulative log-decay
+
+    # intra-chunk (diagonal) term: causal decay matrix L
+    Ldiff = cums[:, :, :, None, :] - cums[:, :, None, :, :]  # (b,nc,l,l,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(Ldiff), 0.0)
+    CB = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)  # (b,nc,l,l)
+    y_diag = jnp.einsum("bclm,bclmh,bcmh,bcmhp->bclhp", CB, L, dtc, xc)
+
+    # chunk-boundary states: h_c = sum_m exp(cums_last - cums_m) dt_m B_m x_m
+    decay_to_end = jnp.exp(cums[:, :, -1:, :] - cums)  # (b,nc,l,H)
+    states = jnp.einsum("bclh,bclh,bcln,bclhp->bchnp", decay_to_end, dtc, Bc, xc)
+
+    # inter-chunk recurrence over h (scan over chunks)
+    chunk_decay = jnp.exp(cums[:, :, -1, :])  # (b,nc,H)
+
+    def step(h, inp):
+        st, dec = inp
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h
+
+    h0 = jnp.zeros((b, H, N, P), jnp.float32)
+    _, h_prev = jax.lax.scan(
+        step,
+        h0,
+        (states.astype(jnp.float32).swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+    )
+    h_prev = h_prev.swapaxes(0, 1)  # (b,nc,H,N,P) state entering each chunk
+
+    # off-diagonal contribution: y_off = C_l . (decay_from_start * h_prev)
+    decay_from_start = jnp.exp(cums)  # (b,nc,l,H)
+    y_off = jnp.einsum(
+        "bcln,bclh,bchnp->bclhp", Cc, decay_from_start, h_prev.astype(Cc.dtype)
+    )
+    y = (y_diag + y_off).reshape(b, S, H, P)[:, :s]
+    return y
+
+
+def mamba_forward(p: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence Mamba2 block. x: (b, s, d)."""
+    b, s, d = x.shape
+    H, P, N, di = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.d_inner
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xbc, dtr = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xin, B, C = xbc[..., :di], xbc[..., di : di + N], xbc[..., di + N :]
+    xh = xin.reshape(b, s, H, P)
+    xh = constrain(xh, "ssm_x")
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y = ssd_chunked(xh, dt, A, B.astype(jnp.float32), C.astype(jnp.float32))
+    y = y + p["D"][None, None, :, None] * xh.astype(y.dtype)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"])
+
+
+# ------------------------------------------------------------- decode path --
+def init_mamba_cache(cfg: ArchConfig, n_layers: int, batch: int, dtype) -> dict:
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((n_layers, batch, H, N, P), jnp.float32),
+    }
+
+
+def mamba_decode_step(p: dict, cfg: ArchConfig, x: jax.Array, cache: dict):
+    """x: (b, 1, d); cache: single-layer {"conv": (b,k-1,c), "ssm": (b,H,N,P)}."""
+    b = x.shape[0]
+    H, P, N, di = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.d_inner
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xbc, dtr = _split_proj(cfg, proj)
+    xbc_t = xbc[:, 0]  # (b, c)
+
+    hist = jnp.concatenate([cache["conv"], xbc_t[:, None]], axis=1)  # (b,k,c)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:]
+
+    xin, B, C = conv_out[..., :di], conv_out[..., di : di + N], conv_out[..., di + N :]
+    xh = xin.reshape(b, H, P)
+    dt = jax.nn.softplus(dtr[:, 0].astype(jnp.float32) + p["dt_bias"])  # (b,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A[None, :])  # (b,H)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt, B.astype(jnp.float32), xh.astype(jnp.float32))
+    h = cache["ssm"] * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", C.astype(jnp.float32), h)
+    y = y + p["D"][None, :, None] * xh.astype(y.dtype)
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["w_out"]), {"conv": new_conv, "ssm": h}

@@ -1,0 +1,297 @@
+"""LM assembly: builds any assigned architecture from its ArchConfig.
+
+A model is a sequence of *blocks*; each block is a scan over ``n`` stacked
+layers of one kind:
+
+  dense        pre-norm GQA attention + pre-norm MLP
+  moe          pre-norm GQA attention + pre-norm MoE FFN
+  mamba        Mamba2 (SSD) block
+  rwkv         RWKV6 time-mix + channel-mix
+  shared_attn  zamba2-style shared transformer block (params shared across
+               occurrences, cache per occurrence)
+
+Block plans express heterogeneous stacks (gemma3 5:1 local:global, zamba2
+Mamba-with-shared-attention) while keeping scan-over-layers everywhere, which
+bounds HLO size at 512-device dry-runs.
+
+API:
+  init_params(cfg, key, dtype)                  -> params
+  forward(cfg, params, batch, remat=False)      -> (logits, aux)
+  init_cache(cfg, batch, max_len, dtype)        -> cache
+  decode_step(cfg, params, cache, batch, pos)   -> (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..runtime.pspec import constrain
+from . import attention as attn
+from . import moe as moe_mod
+from . import rwkv as rwkv_mod
+from . import ssm as ssm_mod
+from .layers import embed, init_embedding, init_mlp, mlp, normal, rmsnorm, unembed
+
+
+@dataclass(frozen=True)
+class BlockSpec:
+    kind: str  # dense | moe | mamba | rwkv | shared_attn
+    n: int  # stacked layers in this block (1 for shared_attn)
+    local: bool = False  # windowed attention
+    shared_idx: int = -1  # which shared param set (zamba2 alternates 2)
+
+
+def layer_plan(cfg: ArchConfig) -> list[BlockSpec]:
+    L = cfg.num_layers
+    if cfg.family == "hybrid":
+        plan: list[BlockSpec] = []
+        done = 0
+        grp = 0
+        while done < L:
+            n = min(cfg.attn_every, L - done)
+            plan.append(BlockSpec("mamba", n))
+            done += n
+            if done < L or n == cfg.attn_every:
+                plan.append(BlockSpec("shared_attn", 1, shared_idx=grp % cfg.n_shared_attn))
+                grp += 1
+        return plan
+    if cfg.family == "ssm":
+        return [BlockSpec("rwkv", L)]
+    kind = "moe" if cfg.family == "moe" else "dense"
+    if cfg.attn == "local_global":
+        plan = []
+        done = 0
+        while done < L:
+            n_local = min(cfg.global_every - 1, L - done)
+            if n_local:
+                plan.append(BlockSpec(kind, n_local, local=True))
+                done += n_local
+            if done < L:
+                plan.append(BlockSpec(kind, 1, local=False))
+                done += 1
+        return plan
+    return [BlockSpec(kind, L, local=(cfg.attn == "swa"))]
+
+
+# ------------------------------------------------------------------- init --
+def _init_layer(key, cfg: ArchConfig, kind: str, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind in ("dense", "shared_attn"):
+        return {
+            "norm1": jnp.zeros((d,), dtype),
+            "attn": attn.init_attn(k1, cfg, dtype),
+            "norm2": jnp.zeros((d,), dtype),
+            "mlp": init_mlp(k2, d, cfg.d_ff, cfg.mlp, dtype),
+        }
+    if kind == "moe":
+        return {
+            "norm1": jnp.zeros((d,), dtype),
+            "attn": attn.init_attn(k1, cfg, dtype),
+            "norm2": jnp.zeros((d,), dtype),
+            "moe": moe_mod.init_moe(k2, cfg, dtype),
+        }
+    if kind == "mamba":
+        return {"norm": jnp.zeros((d,), dtype), "mamba": ssm_mod.init_mamba(k1, cfg, dtype)}
+    if kind == "rwkv":
+        return {
+            "norm1": jnp.zeros((d,), dtype),
+            "tm": rwkv_mod.init_rwkv(k1, cfg, dtype),  # includes cm params
+            "norm2": jnp.zeros((d,), dtype),
+        }
+    raise ValueError(kind)
+
+
+def _stack(trees: list) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> dict:
+    plan = layer_plan(cfg)
+    keys = jax.random.split(key, len(plan) + 4)
+    params: dict[str, Any] = {
+        "embed": init_embedding(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "blocks": [],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal(keys[1], (cfg.d_model, cfg.vocab_size),
+                                   cfg.d_model ** -0.5, dtype)
+    if cfg.frontend == "patch_embed":
+        params["patch_proj"] = normal(keys[2], (cfg.d_model, cfg.d_model),
+                                      cfg.d_model ** -0.5, dtype)
+    shared: dict[int, dict] = {}
+    for i, blk in enumerate(plan):
+        bkey = keys[4 + i]
+        if blk.kind == "shared_attn":
+            if blk.shared_idx not in shared:
+                shared[blk.shared_idx] = _init_layer(bkey, cfg, "shared_attn", dtype)
+            params["blocks"].append({})  # params live in params["shared"]
+        else:
+            layers = [
+                _init_layer(k, cfg, blk.kind, dtype)
+                for k in jax.random.split(bkey, blk.n)
+            ]
+            params["blocks"].append(_stack(layers))
+    if shared:
+        params["shared"] = [shared[i] for i in sorted(shared)]
+    return params
+
+
+# ---------------------------------------------------------------- forward --
+def _layer_forward(cfg: ArchConfig, kind: str, local: bool, p: dict, x: jax.Array):
+    """One full-sequence layer. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("dense", "moe", "shared_attn"):
+        h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+        x = x + attn.full_attention(p["attn"], cfg, h, local=local)
+        h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        if kind == "moe":
+            y, aux = moe_mod.moe_mlp(p["moe"], cfg, h)
+        else:
+            y = mlp(p["mlp"], h, cfg.mlp, cfg.act)
+        x = x + y
+    elif kind == "mamba":
+        h = rmsnorm(x, p["norm"], cfg.norm_eps)
+        x = x + ssm_mod.mamba_forward(p["mamba"], cfg, h)
+    elif kind == "rwkv":
+        b, s, d = x.shape
+        zeros_shift = jnp.zeros((b, d), x.dtype)
+        H = d // cfg.ssm_head_dim
+        state0 = jnp.zeros((b, H, cfg.ssm_head_dim, cfg.ssm_head_dim), jnp.float32)
+        h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+        y, _, _ = rwkv_mod.rwkv_time_mix(p["tm"], cfg, h, zeros_shift, state0)
+        x = x + y
+        h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        y, _ = rwkv_mod.rwkv_channel_mix(p["tm"], cfg, h, zeros_shift)
+        x = x + y
+    else:
+        raise ValueError(kind)
+    x = constrain(x, "residual")
+    return x, aux
+
+
+def _embed_input(cfg: ArchConfig, params: dict, batch: dict) -> jax.Array:
+    if cfg.frontend == "frame_embed":
+        return batch["frame_embeds"]
+    x = embed(params["embed"], batch["tokens"])
+    if (
+        cfg.frontend == "patch_embed"
+        and "patch_embeds" in batch
+        and batch["patch_embeds"].shape[1] <= x.shape[1]  # prefill only
+    ):
+        pe = jnp.einsum("bpd,de->bpe", batch["patch_embeds"], params["patch_proj"])
+        x = jax.lax.dynamic_update_slice(x, pe.astype(x.dtype), (0, 0, 0))
+    return constrain(x, "emb")
+
+
+def forward(cfg: ArchConfig, params: dict, batch: dict, *, remat: bool = False):
+    """Full-sequence forward (training teacher-forcing / prefill).
+
+    Returns (logits, aux) — aux carries the MoE load-balancing loss."""
+    plan = layer_plan(cfg)
+    x = _embed_input(cfg, params, batch)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for blk, bparams in zip(plan, params["blocks"]):
+        if blk.kind == "shared_attn":
+            p = params["shared"][blk.shared_idx]
+            fn = partial(_layer_forward, cfg, "shared_attn", blk.local)
+            if remat:
+                fn = jax.checkpoint(fn)
+            x, aux = fn(p, x)
+            aux_total += aux
+        else:
+            def body(carry, p, _kind=blk.kind, _local=blk.local):
+                h, acc = carry
+                fn = partial(_layer_forward, cfg, _kind, _local)
+                if remat:
+                    fn = jax.checkpoint(fn)
+                h, aux = fn(p, h)
+                return (h, acc + aux), None
+
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), bparams)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(
+        params["embed"] if cfg.tie_embeddings else params["lm_head"], x,
+        tied=cfg.tie_embeddings,
+    )
+    return logits, {"moe_aux": aux_total}
+
+
+# ------------------------------------------------------------------ cache --
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> list:
+    """Per-block decode caches. Windowed attention blocks get ring buffers
+    of ``window`` slots; full attention gets ``max_len``; SSM/RWKV O(1)."""
+    caches: list[Any] = []
+    for blk in layer_plan(cfg):
+        if blk.kind in ("dense", "moe", "shared_attn"):
+            length = min(cfg.window, max_len) if blk.local else max_len
+            caches.append(attn.init_kv_cache(cfg, blk.n, batch, length, dtype))
+        elif blk.kind == "mamba":
+            caches.append(ssm_mod.init_mamba_cache(cfg, blk.n, batch, dtype))
+        elif blk.kind == "rwkv":
+            caches.append(rwkv_mod.init_rwkv_cache(cfg, blk.n, batch, dtype))
+    return caches
+
+
+def _layer_decode(cfg: ArchConfig, kind: str, local: bool, p: dict, x, lcache, pos):
+    if kind in ("dense", "moe", "shared_attn"):
+        h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+        y, lcache = attn.decode_attention(p["attn"], cfg, h, lcache, pos, local=local)
+        x = x + y
+        h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        if kind == "moe":
+            y, _ = moe_mod.moe_mlp(p["moe"], cfg, h)
+        else:
+            y = mlp(p["mlp"], h, cfg.mlp, cfg.act)
+        x = x + y
+    elif kind == "mamba":
+        h = rmsnorm(x, p["norm"], cfg.norm_eps)
+        y, lcache = ssm_mod.mamba_decode_step(p["mamba"], cfg, h, lcache)
+        x = x + y
+    elif kind == "rwkv":
+        h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+        y, new_tm, new_wkv = rwkv_mod.rwkv_time_mix(
+            p["tm"], cfg, h, lcache["shift_tm"], lcache["wkv"]
+        )
+        x = x + y
+        h = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        y, new_cm = rwkv_mod.rwkv_channel_mix(p["tm"], cfg, h, lcache["shift_cm"])
+        x = x + y
+        lcache = {"shift_tm": new_tm, "shift_cm": new_cm, "wkv": new_wkv}
+    return x, lcache
+
+
+def decode_step(cfg: ArchConfig, params: dict, caches: list, batch: dict, pos):
+    """One-token decode. batch: {"tokens": (b,1)} or {"frame_embeds": (b,1,d)}.
+    ``pos`` is the current sequence position (scalar int32)."""
+    x = _embed_input(cfg, params, batch)
+    plan = layer_plan(cfg)
+    new_caches: list[Any] = []
+    for blk, bparams, cache in zip(plan, params["blocks"], caches):
+        if blk.kind == "shared_attn":
+            p = params["shared"][blk.shared_idx]
+            lcache = jax.tree.map(lambda a: a[0], cache)
+            x, lcache = _layer_decode(cfg, "shared_attn", blk.local, p, x, lcache, pos)
+            new_caches.append(jax.tree.map(lambda a: a[None], lcache))
+        else:
+            def body(h, inp, _kind=blk.kind, _local=blk.local):
+                p, lcache = inp
+                h, lcache = _layer_decode(cfg, _kind, _local, p, h, lcache, pos)
+                return h, lcache
+
+            x, cache_out = jax.lax.scan(body, x, (bparams, cache))
+            new_caches.append(cache_out)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(
+        params["embed"] if cfg.tie_embeddings else params["lm_head"], x,
+        tied=cfg.tie_embeddings,
+    )
+    return logits, new_caches

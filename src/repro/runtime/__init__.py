@@ -1,0 +1,16 @@
+# TPU-scale distributed runtime: sharding policy (DP/TP/FSDP/SP),
+# training/serving step factories, the instruction-program-driven pipeline
+# executor (the paper's coordination technique on TPU), checkpointing with
+# elastic resharding, and the data pipeline.
+from . import checkpoint, data, optimizer, pipeline, pspec, serve, sharding, train
+
+__all__ = [
+    "checkpoint",
+    "data",
+    "optimizer",
+    "pipeline",
+    "pspec",
+    "serve",
+    "sharding",
+    "train",
+]

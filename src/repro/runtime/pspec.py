@@ -1,0 +1,56 @@
+"""Activation sharding-constraint hook.
+
+Models are sharding-agnostic; the runtime installs a policy (named activation
+points -> PartitionSpec) and models call ``constrain(x, name)`` at those
+points. Outside a policy context this is a no-op, so models run identically
+on a single device, under tests, and in interpret-mode kernels.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_POLICY: contextvars.ContextVar[Optional[dict]] = contextvars.ContextVar(
+    "repro_sharding_policy", default=None
+)
+
+
+@contextlib.contextmanager
+def activation_policy(mesh, specs: dict[str, P]):
+    """Install named activation PartitionSpecs for the enclosed trace."""
+    tok = _POLICY.set({"mesh": mesh, "specs": dict(specs)})
+    try:
+        yield
+    finally:
+        _POLICY.reset(tok)
+
+
+def constrain(x, name: str):
+    pol = _POLICY.get()
+    if pol is None:
+        return x
+    spec = pol["specs"].get(name)
+    if spec is None or len(spec) > x.ndim:
+        return x
+    # drop mesh axes that do not divide the dimension (e.g. seq-parallel
+    # specs against a decode step's length-1 sequence axis)
+    mesh = pol["mesh"]
+    fixed = []
+    for i, ax in enumerate(spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        fixed.append(ax if x.shape[i] % n == 0 else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fixed)))
+
+
+def current_policy() -> Optional[dict]:
+    return _POLICY.get()

@@ -1,0 +1,305 @@
+"""Compilation framework tests (paper Sec. IV): fusion, DP partitioning,
+SMOF weight scheduling, stage-distance buffers, liveness channel assignment,
+instruction generation, and end-to-end compile->simulate consistency."""
+import math
+
+import pytest
+
+from repro.compiler import (
+    CHUNK_BYTES,
+    buffer_requirements,
+    compile_model,
+    fuse,
+    partition,
+    profile_graph,
+    schedule_weights,
+    zoo,
+)
+from repro.compiler.graph import OpType
+from repro.core import Group, simulate
+from repro.core.pu import PUSpec, make_u50_system
+
+PUS = make_u50_system()
+PU1X = PUS[0]
+PU2X = PUS[5]
+KINDS = {"PU1x": PU1X, "PU2x": PU2X}
+
+
+# ------------------------------------------------------------------ fusion --
+class TestFusion:
+    def test_resnet_bottleneck_fusion_counts(self):
+        g = zoo.resnet50(256)
+        f = fuse(g)
+        # 16 bottlenecks -> 16 FusedConvAdd nodes, no standalone Add/ReLU.
+        fused = [n for n in f.nodes if n.op is OpType.FUSED_CONV_ADD]
+        assert len(fused) == 16
+        assert not [n for n in f.nodes if n.op in (OpType.ADD, OpType.RELU)]
+        # conv1 + 16*3 bottleneck convs + 4 downsamples + pools(2) + fc
+        assert len(f.nodes) == 1 + 16 * 3 + 4 + 2 + 1
+
+    def test_fusion_preserves_macs_and_weights(self):
+        g = zoo.resnet50(256)
+        f = fuse(g)
+        assert f.total_macs() == g.total_macs()
+        assert f.total_weight_bytes() == g.total_weight_bytes()
+
+    def test_fused_nodes_have_relu_and_residual(self):
+        f = fuse(zoo.resnet50(256))
+        for nd in f.nodes:
+            if nd.op is OpType.FUSED_CONV_ADD:
+                assert nd.relu  # bottleneck ends with ReLU(add)
+                assert nd.residual_input is not None
+
+    def test_fusion_topological_validity(self):
+        for g in (zoo.resnet50(224), zoo.tiny_cnn(), zoo.linear_chain()):
+            fuse(g).validate_topological()
+
+    def test_resnet_gmacs_canonical(self):
+        # canonical ResNet-50 ~3.9 GMACs at 224 (conv+fc; pools add a little)
+        g = zoo.resnet50(224)
+        gmacs = g.total_macs() / 1e9
+        assert 3.7 <= gmacs <= 4.3
+        # paper's input: 256x256
+        g256 = zoo.resnet50(256)
+        assert g256.total_macs() > g.total_macs() * 1.25
+
+
+# --------------------------------------------------------------- partition --
+class TestPartition:
+    def test_single_pu_takes_all(self):
+        f = fuse(zoo.linear_chain(6))
+        prof = profile_graph(f, KINDS)
+        p = partition(f, prof, 1, 0)
+        assert len(p.stages) == 1
+        assert len(p.stages[0].nids) == len(f.nodes)
+        assert p.pbe({"PU1x": 1.0, "PU2x": 2.0}) == pytest.approx(1.0)
+
+    def test_dp_matches_bruteforce_two_stage(self):
+        """2-PU split of a chain: DP must find the optimal cut point."""
+        f = fuse(zoo.linear_chain(8))
+        prof = profile_graph(f, KINDS)
+        p = partition(f, prof, 2, 0)
+        times = [prof["PU1x"][nd.nid].t_node for nd in f.nodes]
+        best = min(
+            max(sum(times[:i]), sum(times[i:])) for i in range(len(times) + 1)
+        )
+        assert p.max_stage_time == pytest.approx(best, rel=1e-9)
+
+    def test_more_pus_never_worse(self):
+        f = fuse(zoo.resnet50(224))
+        prof = profile_graph(f, KINDS)
+        prev = float("inf")
+        for a, b in [(1, 0), (1, 1), (2, 2), (5, 5)]:
+            t = partition(f, prof, a, b).max_stage_time
+            assert t <= prev + 1e-12
+            prev = t
+
+    def test_heterogeneity_exploited(self):
+        """With one PU1x + one PU2x, the 2x unit should receive more work."""
+        f = fuse(zoo.resnet50(224))
+        prof = profile_graph(f, KINDS)
+        p = partition(f, prof, 1, 1)
+        used = [s for s in p.stages if s.nids]
+        assert len(used) == 2
+        work = {
+            s.pu_kind: sum(f.node_by_id(n).macs for n in s.nids) for s in used
+        }
+        assert work["PU2x"] > work["PU1x"]
+
+    def test_stages_contiguous_and_complete(self):
+        f = fuse(zoo.resnet50(256))
+        prof = profile_graph(f, KINDS)
+        p = partition(f, prof, 3, 4)
+        covered = [n for s in p.stages for n in s.nids]
+        assert covered == [nd.nid for nd in f.nodes]  # contiguous, in order
+
+
+# ----------------------------------------------------------------- weights --
+class TestWeightScheduling:
+    def test_small_segment_fully_static(self):
+        f = fuse(zoo.tiny_cnn())
+        ws = schedule_weights(f, [nd.nid for nd in f.nodes], PU1X)
+        assert ws.fully_static()
+        assert ws.total_stall() == 0.0
+
+    def test_resnet_whole_model_needs_streaming(self):
+        f = fuse(zoo.resnet50(256))
+        ws = schedule_weights(f, [nd.nid for nd in f.nodes], PU2X)
+        assert not ws.fully_static()  # 25.6 MB weights >> 2.25 MB URAM
+        assert ws.feasible()
+
+    def test_capacity_constraint_holds(self):
+        f = fuse(zoo.resnet50(256))
+        ws = schedule_weights(f, [nd.nid for nd in f.nodes], PU2X)
+        assert ws.static_bytes() + ws.worst_adjacent_dynamic() <= PU2X.uram_capacity_bytes
+
+    def test_deficit_allocation_hides_most_loads(self):
+        """The greedy allocation should hide nearly all weight-transfer time
+        behind execution (residual stall small vs total load time)."""
+        f = fuse(zoo.resnet50(256))
+        ws = schedule_weights(f, [nd.nid for nd in f.nodes], PU2X)
+        dyn_chunks = sum(t.dynamic_chunks for t in ws.tiles)
+        total_load = dyn_chunks * ws.t_chunk_load
+        assert ws.total_stall() < 0.25 * total_load
+
+    def test_static_allocation_reduces_stall_vs_none(self):
+        f = fuse(zoo.resnet50(256))
+        ws = schedule_weights(f, [nd.nid for nd in f.nodes], PU2X)
+        # compare against an all-dynamic schedule
+        from repro.compiler.weights import WeightSchedule, build_tiles
+
+        nids = [nd.nid for nd in f.nodes]
+        raw = WeightSchedule(
+            tiles=build_tiles(f, nids, PU2X),
+            pu_kind="PU2x",
+            capacity_bytes=PU2X.uram_capacity_bytes,
+            t_chunk_load=PU2X.adm_seconds(CHUNK_BYTES),
+        )
+        assert ws.total_stall() < raw.total_stall()
+
+
+# ------------------------------------------------------------------ memory --
+class TestMemoryOptimization:
+    def _partition(self, g, a, b):
+        f = fuse(g)
+        prof = profile_graph(f, KINDS)
+        return f, prof, partition(f, prof, a, b)
+
+    def test_stage_distance_beta(self):
+        """beta(T) = max producer->consumer stage distance + 1."""
+        f, prof, p = self._partition(zoo.linear_chain(8), 2, 0)
+        plans = buffer_requirements(f, p, n_io=4)
+        stage_of = p.stage_of_node()
+        for tid, plan in plans.items():
+            if plan.kind != "intermediate":
+                assert plan.beta == 4
+                continue
+            prod = stage_of[f.producer_of(tid).nid]
+            dist = max(stage_of[c.nid] - prod for c in f.consumers_of(tid))
+            assert plan.beta == dist + 1
+
+    def test_cross_stage_tensor_gets_pingpong(self):
+        f, prof, p = self._partition(zoo.linear_chain(8), 2, 0)
+        plans = buffer_requirements(f, p, n_io=4)
+        stage_of = p.stage_of_node()
+        boundary = [
+            plan
+            for tid, plan in plans.items()
+            if plan.kind == "intermediate"
+            and plan.producer_stage == 0
+            and 1 in plan.consumer_stages
+        ]
+        assert boundary and all(b.beta == 2 for b in boundary)
+
+    def test_residual_spanning_stages_needs_more_buffers(self):
+        """A residual edge crossing k stages needs k+1 buffers (handcrafted
+        partition that splits a residual block across three stages)."""
+        from repro.compiler.partition import Partition, Stage
+
+        f = fuse(zoo.tiny_cnn())
+        # fused nodes: c0(relu), c1(relu), c2+add(resid from c0.out), fc
+        nids = [nd.nid for nd in f.nodes]
+        assert len(nids) == 4
+        p = Partition(
+            stages=[
+                Stage(0, "PU1x", (nids[0],), 1.0),
+                Stage(1, "PU1x", (nids[1],), 1.0),
+                Stage(2, "PU2x", (nids[2],), 1.0),
+                Stage(3, "PU1x", (nids[3],), 1.0),
+            ],
+            node_order=nids,
+        )
+        plans = buffer_requirements(f, p, n_io=4)
+        resid_tid = f.nodes[2].residual_input
+        assert resid_tid is not None
+        # produced at stage 0, consumed at stages 1 (primary) and 2 (residual)
+        assert plans[resid_tid].beta == 3
+
+    def test_fork_inputs_on_distinct_channels(self):
+        """Cross-PU forks (primary + residual into one consumer) must use
+        different HBM channels (Sec. IV-C)."""
+        from repro.compiler.memory import assign_channels
+
+        f, prof, p = self._partition(zoo.resnet50(256), 5, 5)
+        plans = buffer_requirements(f, p, n_io=4)
+        mem = assign_channels(f, p, plans, prof)
+        checked = 0
+        for nd in f.nodes:
+            if nd.residual_input is None:
+                continue
+            prim, res = nd.inputs[0], nd.residual_input
+            if prim in mem.tensors and res in mem.tensors:
+                assert (
+                    mem.tensors[prim].read_channel != mem.tensors[res].read_channel
+                )
+                checked += 1
+        assert checked >= 16
+
+    def test_channel_budget_respected(self):
+        from repro.compiler.memory import assign_channels
+        from repro.core.pu import N_HBM_CHANNELS
+
+        f, prof, p = self._partition(zoo.resnet50(256), 5, 5)
+        plans = buffer_requirements(f, p, n_io=4)
+        mem = assign_channels(f, p, plans, prof)
+        chans = {pl.read_channel for pl in plans.values()} | {
+            pl.write_channel for pl in plans.values()
+        } | set(mem.weight_channel.values())
+        assert all(0 <= c < N_HBM_CHANNELS for c in chans)
+
+
+# ----------------------------------------------------- end-to-end compile --
+class TestCompileEndToEnd:
+    @pytest.mark.parametrize("a,b", [(0, 1), (1, 1), (2, 3), (5, 5)])
+    def test_compile_simulate_consistency(self, a, b):
+        """Simulated throughput within ~12% of the analytic prediction."""
+        g = zoo.resnet50(256)
+        cm = compile_model(g, a, b, rounds=6)
+        for prog in cm.programs:
+            prog.validate()
+        last_stage = max(s.index for s in cm.part.stages if s.nids)
+        res = simulate(cm.programs, first_pid=cm.pid_map[0], last_pid=cm.pid_map[last_stage])
+        assert not res.deadlocked
+        assert res.rounds == 6
+        fps = res.throughput_fps(warmup=2)
+        assert fps == pytest.approx(cm.predicted_fps, rel=0.13)
+
+    def test_dp_c_single_pu_high_ce(self):
+        """DP-C style: one PU runs the whole model at ~95% CE (paper: 98%)."""
+        cm = compile_model(zoo.resnet50(256), 0, 1, rounds=6)
+        res = simulate(cm.programs)
+        fps = res.throughput_fps(warmup=2)
+        gops = 2 * cm.graph.total_macs() * fps / 1e9
+        ce = gops / (cm.used_tops * 1e3)
+        assert ce > 0.92
+
+    def test_dp_a_full_pipeline_ce(self):
+        """DP-A style: all 10 PUs pipelined; CE in the high-80s (paper 88.5%)."""
+        cm = compile_model(zoo.resnet50(256), 5, 5, rounds=8)
+        last_stage = max(s.index for s in cm.part.stages if s.nids)
+        res = simulate(cm.programs, first_pid=cm.pid_map[0], last_pid=cm.pid_map[last_stage])
+        fps = res.throughput_fps(warmup=3)
+        gops = 2 * cm.graph.total_macs() * fps / 1e9
+        ce = gops / 4608.0
+        assert 0.80 <= ce <= 0.98
+        assert cm.pbe() > 0.85
+
+    def test_tiny_cnn_two_pu(self):
+        cm = compile_model(zoo.tiny_cnn(), 1, 1, rounds=5)
+        res = simulate(cm.programs)
+        assert not res.deadlocked
+        assert res.rounds == 5
+
+    def test_programs_use_uniform_coordination(self):
+        """Sync instructions appear in LD/ST only; CP carries compute+weights."""
+        from repro.core.isa import Sync, Compute
+
+        cm = compile_model(zoo.resnet50(256), 2, 2, rounds=4)
+        for prog in cm.programs:
+            assert not [i for i in prog.cp if isinstance(i, Sync)]
+            assert [i for i in prog.cp if isinstance(i, Compute)]
+
+    def test_rounds_parameter_respected(self):
+        cm = compile_model(zoo.tiny_cnn(), 1, 0, rounds=9)
+        res = simulate(cm.programs)
+        assert res.rounds == 9

@@ -1,0 +1,112 @@
+"""DSE methodology tests (paper Sec. V-A, Figs. 5/6, Table III claims)."""
+import pytest
+
+from repro.compiler import zoo
+from repro.dse import (
+    constrained,
+    enumerate_multi_batch,
+    enumerate_single_batch,
+    explore,
+    pareto_front,
+)
+
+
+@pytest.fixture(scope="module")
+def dse():
+    return explore(zoo.resnet50(256))
+
+
+@pytest.fixture(scope="module")
+def gopf():
+    return 2 * zoo.resnet50(256).total_macs() / 1e9
+
+
+class TestEnumeration:
+    def test_35_single_batch_configs(self, dse):
+        """(a,b) with a<=5, b<=5, a+b>=1 -> 6*6-1 = 35 configurations."""
+        assert len(dse.single) == 35
+        assert len({p.config for p in dse.single}) == 35
+
+    def test_multi_batch_respects_resources(self, dse):
+        for s in dse.multi:
+            assert s.total_a <= 5 and s.total_b <= 5
+            assert s.batch >= 1
+
+    def test_multi_batch_unordered(self, dse):
+        seen = set()
+        for s in dse.multi:
+            assert s.configs == tuple(sorted(s.configs))
+            assert s.configs not in seen
+            seen.add(s.configs)
+
+    def test_throughput_aggregates(self, dse):
+        by_cfg = {p.config: p for p in dse.single}
+        for s in dse.multi[:200]:
+            expect = sum(by_cfg[c].fps for c in s.configs)
+            assert s.throughput == pytest.approx(expect)
+            assert s.latency == pytest.approx(max(by_cfg[c].latency for c in s.configs))
+
+
+class TestParetoAnalysis:
+    def test_frontier_is_nondominated(self, dse):
+        for f in dse.multi_frontier:
+            dominated = any(
+                o.throughput >= f.throughput and o.latency <= f.latency
+                and (o.throughput > f.throughput or o.latency < f.latency)
+                for o in dse.multi
+            )
+            assert not dominated
+
+    def test_constraint_filtering(self, dse):
+        lim = constrained(dse.multi, max_latency=0.020, min_throughput=100.0)
+        assert lim
+        assert all(s.latency <= 0.020 and s.throughput >= 100.0 for s in lim)
+
+    def test_tolerance_admits_more_points(self):
+        res0 = explore(zoo.resnet50(256), tolerance=0.0)
+        res1 = explore(zoo.resnet50(256), tolerance=0.02)
+        assert len(res1.multi_frontier) >= len(res0.multi_frontier)
+
+
+class TestPaperClaims:
+    """Quantitative reproduction of the paper's Sec. V-A findings."""
+
+    def test_dp_a_uses_all_pus(self, dse):
+        assert dse.dp_a.config == (5, 5)
+        # paper: DP-A PBE 90.9% — our profile model lands in the same band
+        assert 0.88 <= dse.dp_a.pbe <= 0.97
+
+    def test_dp_b_hybrid_beats_pure_pipeline(self, dse):
+        """Key insight: hybrid parallelism outperforms the all-PU pipeline
+        (paper: 1.1x) at higher latency."""
+        ratio = dse.dp_b.throughput / dse.dp_a.fps
+        assert 1.02 <= ratio <= 1.2
+        assert dse.dp_b.latency > dse.dp_a.latency
+
+    def test_dp_b_high_system_pbe(self, dse):
+        assert dse.dp_b.system_pbe >= 0.97  # paper: 99%
+
+    def test_dp_c_matches_dp_b_throughput(self, dse):
+        """DP-C (one PU per batch) reaches ~DP-B throughput with 2x batches."""
+        assert dse.dp_c.throughput == pytest.approx(dse.dp_b.throughput, rel=0.02)
+        assert dse.dp_c.batch == 10
+        assert dse.dp_b.batch < dse.dp_c.batch
+
+    def test_compute_efficiency_bands(self, dse, gopf):
+        """CE 88.5%-98.0% across DP-A/B/C (Table III)."""
+        ce_a = dse.dp_a.fps * gopf / 4608.0
+        ce_c = dse.dp_c.throughput * gopf / 4608.0
+        assert 0.85 <= ce_a <= 0.97
+        assert 0.95 <= ce_c <= 1.0
+        assert ce_c > ce_a
+
+    def test_fps_per_tops_competitive(self, dse, gopf):
+        """Paper: DP-B/C reach ~126.9 FPS/TOPS (224-eq frames, peak TOPS)."""
+        fps224 = dse.dp_c.throughput * gopf / 7.72
+        fps_per_tops = fps224 / 4.608
+        assert 115.0 <= fps_per_tops <= 135.0
+
+    def test_single_pu_configs_have_ideal_pbe(self, dse):
+        for p in dse.single:
+            if p.a + p.b == 1:
+                assert p.pbe == pytest.approx(1.0)

@@ -1,0 +1,177 @@
+"""ISA unit tests: 64-bit encode/decode round-trips + Table I(b) dynamic
+state-update algorithms (AddrCyc, Sync)."""
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.isa import (
+    AddrCyc,
+    Compute,
+    Config,
+    DataMove,
+    Group,
+    Instruction,
+    Opcode,
+    ProgCtrl,
+    Sync,
+    validate_group,
+)
+from repro.core.program import Program, PUProgram
+
+
+# ---------------------------------------------------------------- encoding --
+ALL_SAMPLES = [
+    ProgCtrl(nr=0, icu_ba=3, prg_end=True),
+    ProgCtrl(nr=1000, icu_ba=0),
+    Config(op=Opcode.IM2COL_PRM, param0=7, param1=3, param2=1, param3=224),
+    Config(op=Opcode.URAM_PRM, param0=0x1234),
+    DataMove(op=Opcode.LINEAR_ADM, cur_ba=0xABCD00, length=65536, channel=17),
+    DataMove(op=Opcode.WEIGHTS_ADM, cur_ba=64, length=64, channel=0),
+    AddrCyc(ba=0x100000, aoffs=4096, nc=3, ic=3),
+    Sync(op=Opcode.SEND_REQ, pid=9, bid=5, base_bid=0, nc=7, ic=7),
+    Sync(op=Opcode.WAIT_ACK, pid=1, bid=0, base_bid=0, nc=1, ic=1, prg_end=True),
+    Compute(m=2048, n=4096, k=4608, relu=True, add_enable=True, scale_shift=7,
+            rounds=1, wchunks=36),
+]
+
+
+@pytest.mark.parametrize("inst", ALL_SAMPLES, ids=lambda i: type(i).__name__ + "_" + str(id(i) % 97))
+def test_encode_decode_roundtrip(inst):
+    word = inst.encode()
+    assert 0 <= word < (1 << 64), "must be a 64-bit instruction"
+    back = Instruction.decode(word)
+    assert back == inst
+
+
+def test_field_overflow_rejected():
+    with pytest.raises(ValueError):
+        Compute(m=1 << 13).encode()
+    with pytest.raises(ValueError):
+        DataMove(op=Opcode.LINEAR_ADM, length=64 << 22).encode()
+    # HBM addresses must be 64-byte (AXI beat) aligned.
+    with pytest.raises(ValueError):
+        DataMove(op=Opcode.LINEAR_ADM, cur_ba=17).encode()
+
+
+def test_datamove_length_rounds_up_to_beat():
+    """Transfer lengths are encoded in 64 B beats (rounded up), as the ADM
+    issues whole AXI beats."""
+    inst = DataMove(op=Opcode.LINEAR_ADM, cur_ba=0, length=1000)
+    back = Instruction.decode(inst.encode())
+    assert back.length == 1024
+
+
+@given(
+    ba=st.integers(0, (1 << 20) - 1),
+    aoffs=st.integers(0, (1 << 14) - 1),
+    nc=st.integers(0, 127),
+)
+def test_addrcyc_roundtrip_hypothesis(ba, aoffs, nc):
+    inst = AddrCyc(ba=ba * 64, aoffs=aoffs * 64, nc=nc, ic=nc)
+    assert Instruction.decode(inst.encode()) == inst
+
+
+# --------------------------------------------------- Table I(b) algorithms --
+def test_addrcyc_cycles_over_n_regions():
+    """NC=n-1 cycles a DataMove base address over n regions."""
+    n, size, base = 4, 4096, 0x1000
+    adm = DataMove(op=Opcode.LINEAR_ADM, cur_ba=base, length=size)
+    cyc = AddrCyc(ba=base, aoffs=size, nc=n - 1, ic=n - 1)
+    seen = []
+    for _ in range(3 * n):
+        seen.append(adm.cur_ba)
+        adm.cur_ba = cyc.step(adm.cur_ba)
+    expect = [base + size * (i % n) for i in range(3 * n)]
+    assert seen == expect
+
+
+def test_addrcyc_pingpong_nc1():
+    """NC=1 creates the two-region ping-pong of the B-buffers."""
+    adm = DataMove(op=Opcode.LINEAR_ADM, cur_ba=0, length=64)
+    cyc = AddrCyc(ba=0, aoffs=64, nc=1, ic=1)
+    seq = []
+    for _ in range(6):
+        seq.append(adm.cur_ba)
+        adm.cur_ba = cyc.step(adm.cur_ba)
+    assert seq == [0, 64, 0, 64, 0, 64]
+
+
+def test_sync_bid_bypass():
+    s = Sync(op=Opcode.SEND_ACK, pid=0, bid=1, nc=0)
+    for _ in range(5):
+        s.step()
+        assert s.bid == 1  # NC==0: bypass, BID unchanged
+
+
+def test_sync_bid_pingpong():
+    s = Sync(op=Opcode.SEND_REQ, pid=1, bid=0, base_bid=0, nc=1, ic=1)
+    bids = []
+    for _ in range(6):
+        bids.append(s.bid)
+        s.step()
+    assert bids == [0, 1, 0, 1, 0, 1]
+
+
+def test_sync_bid_depth4_rotation():
+    """Deeper pipelines rotate BID over proportionally more buffers."""
+    s = Sync(op=Opcode.SEND_REQ, pid=1, bid=2, base_bid=2, nc=3, ic=3)
+    bids = [s.bid]
+    for _ in range(8):
+        s.step()
+        bids.append(s.bid)
+    assert bids[:8] == [2, 3, 4, 5, 2, 3, 4, 5]
+
+
+@given(nc=st.integers(1, 12), base=st.integers(0, 7), steps=st.integers(1, 60))
+def test_sync_bid_cycle_property(nc, base, steps):
+    s = Sync(op=Opcode.WAIT_REQ, pid=0, bid=base, base_bid=base, nc=nc, ic=nc)
+    for i in range(steps):
+        assert s.bid == base + (i % (nc + 1))
+        s.step()
+
+
+# ------------------------------------------------------------ group checks --
+def test_group_legality():
+    validate_group(Sync(op=Opcode.WAIT_REQ, pid=0), Group.LD)
+    validate_group(Sync(op=Opcode.SEND_REQ, pid=0), Group.ST)
+    with pytest.raises(ValueError):
+        validate_group(Sync(op=Opcode.SEND_REQ, pid=0), Group.LD)
+    with pytest.raises(ValueError):
+        validate_group(Compute(), Group.LD)
+    with pytest.raises(ValueError):
+        validate_group(DataMove(op=Opcode.WEIGHTS_ADM), Group.ST)
+
+
+def test_program_validation():
+    good = Program.assemble(
+        Group.LD,
+        [
+            DataMove(op=Opcode.LINEAR_ADM, cur_ba=0, length=64),
+            AddrCyc(ba=0, aoffs=64, nc=1, ic=1),
+        ],
+        rounds=2,
+    )
+    good.validate()
+    # AddrCyc without a predecessor DataMove is illegal.
+    bad = Program(Group.LD, [AddrCyc(), ProgCtrl(nr=1, prg_end=True)])
+    with pytest.raises(ValueError):
+        bad.validate()
+    # Missing PRG_END terminal.
+    bad2 = Program(Group.LD, [DataMove(op=Opcode.LINEAR_ADM)])
+    with pytest.raises(ValueError):
+        bad2.validate()
+
+
+def test_program_encode_decode_roundtrip():
+    prog = Program.assemble(
+        Group.ST,
+        [
+            Sync(op=Opcode.WAIT_ACK, pid=1, bid=0, base_bid=0, nc=1, ic=1),
+            DataMove(op=Opcode.LINEAR_ADM, cur_ba=0x40, length=128, channel=2),
+            AddrCyc(ba=0x40, aoffs=128, nc=1, ic=1),
+            Sync(op=Opcode.SEND_REQ, pid=1, bid=0, base_bid=0, nc=1, ic=1),
+        ],
+        rounds=10,
+    )
+    words = prog.encode()
+    back = Program.decode(Group.ST, words)
+    assert back.instructions == prog.instructions

@@ -1,0 +1,128 @@
+"""Sharding policy tests + small-mesh lower/compile smoke (subprocess with
+forced host devices — the full 512-device dry-run is exercised by
+repro.launch.dryrun; these tests keep the policy honest at test speed)."""
+import os
+import subprocess
+import sys
+
+import pytest
+import jax
+
+from repro.configs import all_configs, get_config
+
+
+class TestPolicyRules:
+    def _policy(self, arch, multi_pod=False):
+        # policy construction only needs mesh *shape* metadata; build an
+        # abstract mesh over the single CPU device via AbstractMesh
+        from jax.sharding import AbstractMesh
+        from repro.runtime.sharding import make_policy
+
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+        mesh = AbstractMesh(shape, axes)
+        return make_policy(get_config(arch), mesh)
+
+    def test_attn_mode_by_divisibility(self):
+        assert self._policy("qwen3-0.6b").attn_mode == "heads"  # H=16
+        assert self._policy("starcoder2-15b").attn_mode == "heads"  # H=48
+        assert self._policy("gemma3-4b").attn_mode == "dmodel"  # H=8 < 16
+
+    def test_fsdp_triggers_on_size(self):
+        assert self._policy("grok-1-314b").fsdp  # 314B
+        assert self._policy("dbrx-132b").fsdp
+        assert not self._policy("qwen3-0.6b").fsdp
+        assert not self._policy("rwkv6-7b").fsdp
+
+    def test_multi_pod_batch_axes(self):
+        p = self._policy("qwen3-0.6b", multi_pod=True)
+        assert p.batch_axes == ("pod", "data")
+        p1 = self._policy("qwen3-0.6b", multi_pod=False)
+        assert p1.batch_axes == ("data",)
+
+    @pytest.mark.parametrize("arch", sorted(all_configs()))
+    def test_param_specs_divisible(self, arch):
+        """Every emitted spec must evenly divide its tensor dimension."""
+        from repro.launch import specs as lspecs
+
+        policy = self._policy(arch)
+        p = lspecs.params_specs(get_config(arch))
+        shardings = policy.params_sharding(p)
+
+        def check(leaf, sh):
+            spec = sh.spec
+            for i, ax in enumerate(spec):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                n = 1
+                for a in axes:
+                    n *= policy.mesh.shape[a]
+                assert leaf.shape[i] % n == 0, (arch, leaf.shape, spec)
+
+        jax.tree.map(check, p, shardings)
+
+    @pytest.mark.parametrize("arch", ["grok-1-314b", "internvl2-76b", "dbrx-132b"])
+    def test_big_models_fit_per_chip(self, arch):
+        """bf16 params sharded over the 256-chip pod must fit 16 GB/chip."""
+        from repro.launch import specs as lspecs
+        import numpy as np
+
+        policy = self._policy(arch)
+        p = lspecs.params_specs(get_config(arch))
+        shardings = policy.params_sharding(p)
+        per_chip = 0
+        for leaf, sh in zip(jax.tree.leaves(p), jax.tree.leaves(shardings)):
+            n = 1
+            for ax in sh.spec:
+                if ax is None:
+                    continue
+                for a in (ax if isinstance(ax, tuple) else (ax,)):
+                    n *= policy.mesh.shape[a]
+            per_chip += leaf.size * 2 / n
+        assert per_chip < 10 * 2**30, f"{arch}: {per_chip/2**30:.1f} GiB/chip"
+
+
+SMALL_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.configs.base import ShapeCfg
+from repro.launch import specs
+from repro.runtime.sharding import make_policy
+from repro.runtime.serve import make_serve_step, make_prefill
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+arch = os.environ["TEST_ARCH"]
+cfg = get_config(arch).reduced()
+policy = make_policy(cfg, mesh)
+p = specs.params_specs(cfg)
+ps = policy.params_sharding(p)
+
+shape = ShapeCfg("t", 64, 4, "prefill")
+batch = specs.input_specs(cfg, shape)
+with mesh:
+    fn = jax.jit(make_prefill(cfg, policy), in_shardings=(ps, policy.inputs_sharding(batch)))
+    fn.lower(p, batch).compile()
+    c = specs.cache_specs(cfg, 4, 64)
+    cs = policy.cache_sharding(c)
+    db = specs.decode_input_specs(cfg, ShapeCfg("d", 64, 4, "decode"))
+    sfn = jax.jit(make_serve_step(cfg, policy),
+                  in_shardings=(ps, cs, policy.inputs_sharding(db),
+                                jax.NamedSharding(mesh, jax.sharding.PartitionSpec())))
+    sfn.lower(p, c, db, jax.ShapeDtypeStruct((), jnp.int32)).compile()
+print("SMALL_MESH_OK")
+"""
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "zamba2-7b", "rwkv6-7b", "dbrx-132b"])
+def test_reduced_configs_compile_on_small_mesh(arch):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["TEST_ARCH"] = arch
+    out = subprocess.run(
+        [sys.executable, "-c", SMALL_MESH_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert "SMALL_MESH_OK" in out.stdout, out.stderr[-3000:]
