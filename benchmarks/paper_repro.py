@@ -13,9 +13,10 @@ from __future__ import annotations
 
 import time
 
-from repro.compiler import compile_model, zoo
-from repro.core import Group, MultiPUSimulator, latency_matrix, make_u50_system, simulate
+from repro.compiler import zoo
+from repro.core import Group, MultiPUSimulator, latency_matrix, make_u50_system
 from repro.core.demo import GemmShape, build_two_pu_pipeline
+from repro.deploy import System
 from repro.dse import explore
 
 GOPS_224EQ_PER_FRAME = 7.72  # canonical ResNet-50 GOPs (224x224, Table III)
@@ -148,89 +149,48 @@ def table3_comparison(dse=None) -> list[str]:
     return rows
 
 
-def simulated_design_points() -> list[str]:
-    """Execute DP-A / DP-B / DP-C instruction programs on the simulator."""
+def simulated_design_points(dse=None) -> list[str]:
+    """Execute DP-A / DP-B / DP-C on one System session: each DSE design
+    point compiles to a Deployment (disjoint PUs + HBM channel pools handled
+    by the deploy layer) and the strategies are hot-swapped on the same
+    fixed machine — the paper's runtime switching, measured."""
     g = zoo.resnet50(256)
     gopf = _gopf(g)
+    dse = dse or explore(g)
+    system = System()
     rows = []
+    measured: dict[str, float] = {}
 
-    def sim_single(a: int, b: int, label: str):
-        cm = compile_model(g, a, b, rounds=6)
-        last = max(s.index for s in cm.part.stages if s.nids)
+    plan = [
+        ("DP-A_pipeline_all", dse.dp_a, 6),
+        ("DP-B_hybrid", dse.dp_b, 5),
+        ("DP-C_10_independent", dse.dp_c, 5),
+    ]
+    for label, point, rounds in plan:
+        dep = dse.deploy(point, rounds=rounds)
+        system.load(dep) if system.deployment is None else system.switch(dep)
         t0 = time.perf_counter()
-        res = simulate(cm.programs, first_pid=cm.pid_map[0], last_pid=cm.pid_map[last])
+        res = system.run()
         wall_us = (time.perf_counter() - t0) * 1e6
-        fps = res.throughput_fps(warmup=2)
+        fps = res.aggregate_fps(warmup=2)
         gops = fps * gopf
+        measured[label] = fps
         rows.append(
-            f"sim.{label},{wall_us:.0f},fps224eq={gops/GOPS_224EQ_PER_FRAME:.1f};"
-            f"gops={gops:.0f};ce={gops/(SYSTEM_PEAK_TOPS*1e3):.3f};"
-            f"latency_ms={res.latency_seconds()*1e3:.2f};deadlock={int(res.deadlocked)}"
+            f"sim.{label},{wall_us:.0f},batch={dep.batch};"
+            f"fps224eq={gops/GOPS_224EQ_PER_FRAME:.1f};gops={gops:.0f};"
+            f"ce={gops/(SYSTEM_PEAK_TOPS*1e3):.3f};"
+            f"latency_ms={res.member_latency_seconds()*1e3:.2f};"
+            f"pred_err={abs(fps - dep.predicted_throughput)/dep.predicted_throughput:.3f};"
+            f"deadlock={int(res.deadlocked)}"
         )
-        return gops
 
-    sim_single(5, 5, "DP-A_pipeline_all")
-
-    # DP-B: hybrid schedule from the DSE — pipeline within each member,
-    # batch-level parallelism across members, disjoint PUs + channel pools.
-    dse = explore(g)
-    members_b = list(dse.dp_b.configs)
-    programs = []
-    exit_pid_of_member: list[int] = []
-    offsets = {"PU1x": 0, "PU2x": 0}
-    chan_next = 0
-    sim = MultiPUSimulator()
-    for a, b in members_b:
-        n_ch = min(32 - chan_next, max(3, 3 * (a + b)))
-        pool = list(range(chan_next, chan_next + n_ch))
-        chan_next += n_ch
-        cm = compile_model(g, a, b, rounds=5, pid_offset=dict(offsets), channel_pool=pool)
-        offsets["PU1x"] += a
-        offsets["PU2x"] += b
-        programs.extend(cm.programs)
-        last_stage = max(s.index for s in cm.part.stages if s.nids)
-        exit_pid_of_member.append(cm.pid_map[last_stage])
-    t0 = time.perf_counter()
-    res = sim.run(programs)
-    wall_us = (time.perf_counter() - t0) * 1e6
-    total = 0.0
-    for pid in exit_pid_of_member:
-        ends = res.pu_stats[pid][Group.ST].round_end_times
-        if len(ends) > 2:
-            total += (len(ends) - 2) / ((ends[-1] - ends[1]) / 300e6)
-    gops = total * gopf
+    # The switching story in one row: DP-A -> DP-C mid-session, both rates
+    # measured on the unchanged PU array.
     rows.append(
-        f"sim.DP-B_hybrid,{wall_us:.0f},batch={len(members_b)};"
-        f"fps224eq={gops/GOPS_224EQ_PER_FRAME:.1f};gops={gops:.0f};"
-        f"ce={gops/(SYSTEM_PEAK_TOPS*1e3):.3f};deadlock={int(res.deadlocked)}"
-    )
-
-    # DP-C: 10 concurrent single-PU pipelines on disjoint PUs, each member
-    # on a disjoint 3-channel HBM pool (weights + LD + ST).
-    programs = []
-    offsets = {"PU1x": 0, "PU2x": 0}
-    members = [(1, 0)] * 5 + [(0, 1)] * 5
-    sim = MultiPUSimulator()
-    for i, (a, b) in enumerate(members):
-        pool = [3 * i, 3 * i + 1, 3 * i + 2]
-        cm = compile_model(g, a, b, rounds=5, pid_offset=dict(offsets), channel_pool=pool)
-        offsets["PU1x"] += a
-        offsets["PU2x"] += b
-        programs.extend(cm.programs)
-    t0 = time.perf_counter()
-    res = sim.run(programs)
-    wall_us = (time.perf_counter() - t0) * 1e6
-    # throughput: sum of per-PU ST round rates (steady state: skip round 1;
-    # the window ends[1]..ends[-1] contains len(ends)-2 completed intervals)
-    total = 0.0
-    for prog in programs:
-        ends = res.pu_stats[prog.pid][Group.ST].round_end_times
-        if len(ends) > 2:
-            total += (len(ends) - 2) / ((ends[-1] - ends[1]) / 300e6)
-    gops = total * gopf
-    rows.append(
-        f"sim.DP-C_10_independent,{wall_us:.0f},fps224eq={gops/GOPS_224EQ_PER_FRAME:.1f};"
-        f"gops={gops:.0f};ce={gops/(SYSTEM_PEAK_TOPS*1e3):.3f};deadlock={int(res.deadlocked)}"
+        "sim.switch_DPA_to_DPC,,"
+        f"fps224eq_before={measured['DP-A_pipeline_all'] * gopf / GOPS_224EQ_PER_FRAME:.1f};"
+        f"fps224eq_after={measured['DP-C_10_independent'] * gopf / GOPS_224EQ_PER_FRAME:.1f};"
+        f"loads={len(system.history)};reconfigured=0"
     )
     return rows
 
@@ -244,5 +204,5 @@ def run() -> list[str]:
     out += fig6a_single_batch(dse)
     out += fig6b_multi_batch(dse)
     out += table3_comparison(dse)
-    out += simulated_design_points()
+    out += simulated_design_points(dse)
     return out

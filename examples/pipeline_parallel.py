@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import MultiPUSimulator
+from repro.core import MultiPUSimulator, PipelineMember
 from repro.core.pu import PUSpec
 from repro.models import transformer as tf
 from repro.runtime.pipeline import (
@@ -51,8 +51,11 @@ def main() -> None:
     pus = [PUSpec(pid=i, kind="PU2x", sa_rows=64, sa_cols=8, slr=i // 2)
            for i in range(args.stages)]
     sim = MultiPUSimulator(pus)
-    res = sim.run(plan.programs, first_pid=0, last_pid=args.stages - 1)
-    print(f"\nsimulator: {res.rounds} microbatches drained, "
+    member = PipelineMember(first_pid=0, last_pid=args.stages - 1, label="lm")
+    res = sim.run(plan.programs, members=[member])
+    mres = res.members[0]
+    print(f"\nsimulator: {mres.rounds} microbatches drained, "
+          f"{mres.throughput_fps(warmup=1):.1f} microbatches/s, "
           f"deadlock={res.deadlocked}, {res.tokens_sent} REQ/ACK tokens")
 
     # --- step 3: execute on the mesh (shard_map + ppermute) ----------------
@@ -75,7 +78,22 @@ def main() -> None:
               f"to run the mesh execution step)")
 
     # --- step 4: strategy switching without reconfiguration ----------------
-    print("\nruntime deployment switching (same mesh, new instruction programs):")
+    # 4a. On the simulator: the PU array is fixed; sim.reset() clears only
+    # the transient ICU/ISU state and a re-planned instruction schedule with
+    # fewer stages runs on the same machine (repro.deploy.System wraps this
+    # load/switch/run cycle for compiled DNN deployments).
+    print("\nruntime switching on the fixed simulated machine:")
+    for n_stages in sorted({args.stages, max(1, args.stages // 2)}, reverse=True):
+        alt = plan_pipeline(cfg, n_stages=n_stages, microbatches=args.microbatches,
+                            seq_len=S, microbatch_size=mb)
+        sim.reset()
+        r = sim.run(alt.programs,
+                    members=[PipelineMember(0, n_stages - 1, f"{n_stages}stg")])
+        print(f"  stages={n_stages}: {r.members[0].throughput_fps(warmup=1):8.1f} "
+              f"microbatches/s measured (deadlock={r.deadlocked})")
+
+    # 4b. At TPU scale: the same trade-off, analytically.
+    print("\nanalytic deployment sweep (same mesh, new instruction programs):")
     chips = 256
     for n_stages in (1, 2, 4, 8):
         dp = chips // n_stages

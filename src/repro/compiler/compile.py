@@ -14,6 +14,7 @@ from typing import Optional
 
 from ..core.program import PUProgram
 from ..core.pu import PUSpec, make_u50_system
+from .codegen import generate_programs
 from .fusion import fuse
 from .graph import Graph
 from .memory import MemoryPlan, assign_channels, buffer_requirements
@@ -144,9 +145,6 @@ def compile_model(
         pool = pus
     pid_map = assign_pids(part, pool)
     pu_specs = {p.pid: p for p in pus}
-
-    programs = generate = None
-    from .codegen import generate_programs
 
     programs = generate_programs(
         fused, part, mem, wscheds, pid_map, pu_specs, rounds=rounds

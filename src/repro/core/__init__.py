@@ -18,7 +18,7 @@ from .program import Program, PUProgram
 from .pu import PUSpec, make_u50_system, system_peak_tops
 from .isu import ISUNetwork, Token, latency_matrix, token_latency_cycles
 from .icu import ICU
-from .simulator import MultiPUSimulator, SimResult, simulate
+from .simulator import MemberSimResult, MultiPUSimulator, PipelineMember, SimResult, simulate
 
 __all__ = [
     "AddrCyc",
@@ -40,7 +40,9 @@ __all__ = [
     "latency_matrix",
     "token_latency_cycles",
     "ICU",
+    "MemberSimResult",
     "MultiPUSimulator",
+    "PipelineMember",
     "SimResult",
     "simulate",
 ]

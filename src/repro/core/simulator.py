@@ -5,6 +5,12 @@ coordination state), the ISU token network (deterministic latencies), and the
 shared HBM channels. Executes the instruction programs produced by the
 compilation framework and reports throughput / latency / efficiency — this is
 the executable model behind the paper's Figs. 3, 6 and Table III.
+
+Deployments may comprise several concurrent member pipelines on disjoint PU
+subsets (batch-level / hybrid parallelism, Sec. V-A). ``run`` therefore takes
+a list of :class:`PipelineMember` descriptors and the :class:`SimResult`
+carries per-member round accounting plus system aggregates; the single
+``first_pid``/``last_pid`` form remains as the one-member special case.
 """
 from __future__ import annotations
 
@@ -19,6 +25,61 @@ from .program import PUProgram
 from .pu import N_HBM_CHANNELS, PUSpec, SYS_CLK_HZ, make_u50_system, system_peak_tops
 
 
+@dataclass(frozen=True)
+class PipelineMember:
+    """Entry/exit PUs of one member pipeline, for latency accounting."""
+
+    first_pid: int
+    last_pid: int
+    label: str = ""
+
+
+def _steady_fps(round_ends: list[float], warmup: int, sys_clk_hz: float,
+                fallback_rounds: int, end_cycles: float) -> float:
+    """Steady-state rounds/s measured after ``warmup`` rounds."""
+    if len(round_ends) <= warmup:
+        if not round_ends or not end_cycles:
+            return 0.0
+        return fallback_rounds / (end_cycles / sys_clk_hz)
+    n = len(round_ends) - warmup
+    if warmup > 0:
+        dt = (round_ends[-1] - round_ends[warmup - 1]) / sys_clk_hz
+    else:
+        dt = round_ends[-1] / sys_clk_hz
+    return n / dt if dt > 0 else 0.0
+
+
+def _mean_latency(latencies: list[float], skip_warmup: int, sys_clk_hz: float) -> float:
+    lats = latencies[skip_warmup:] or latencies
+    if not lats:
+        return 0.0
+    return (sum(lats) / len(lats)) / sys_clk_hz
+
+
+@dataclass
+class MemberSimResult:
+    """Round accounting of one member pipeline of a deployment."""
+
+    member: PipelineMember
+    sys_clk_hz: float
+    end_cycles: float
+    rounds: int
+    # round r latency: first-PU LD round start -> last-PU ST round end
+    round_latencies_cycles: list[float] = field(default_factory=list)
+    round_end_cycles: list[float] = field(default_factory=list)
+
+    @property
+    def label(self) -> str:
+        return self.member.label
+
+    def throughput_fps(self, warmup: int = 1) -> float:
+        return _steady_fps(self.round_end_cycles, warmup, self.sys_clk_hz,
+                           self.rounds, self.end_cycles)
+
+    def latency_seconds(self, skip_warmup: int = 1) -> float:
+        return _mean_latency(self.round_latencies_cycles, skip_warmup, self.sys_clk_hz)
+
+
 @dataclass
 class SimResult:
     sys_clk_hz: float
@@ -27,9 +88,12 @@ class SimResult:
     pu_stats: dict[int, dict[Group, GroupStats]]
     tokens_sent: int
     deadlocked: bool
-    # round r latency: first-PU LD round start -> last-PU ST round end
+    # Merged over members (identical to the member's own lists when there is
+    # only one member pipeline, which keeps the historical single-pipeline
+    # semantics of these fields).
     round_latencies_cycles: list[float] = field(default_factory=list)
     round_end_cycles: list[float] = field(default_factory=list)
+    members: list[MemberSimResult] = field(default_factory=list)
 
     # -- derived metrics -----------------------------------------------------
     @property
@@ -37,21 +101,26 @@ class SimResult:
         return self.end_cycles / self.sys_clk_hz
 
     def throughput_fps(self, warmup: int = 1) -> float:
-        """Steady-state rounds/s measured after ``warmup`` rounds."""
-        ends = self.round_end_cycles
-        if len(ends) <= warmup:
-            if not ends:
-                return 0.0
-            return self.rounds / self.end_seconds
-        n = len(ends) - warmup
-        dt = (ends[-1] - ends[warmup - 1]) / self.sys_clk_hz if warmup > 0 else ends[-1] / self.sys_clk_hz
-        return n / dt if dt > 0 else 0.0
+        """Steady-state rounds/s measured after ``warmup`` rounds (over the
+        merged round-completion stream of all member pipelines)."""
+        return _steady_fps(self.round_end_cycles, warmup, self.sys_clk_hz,
+                           self.rounds, self.end_cycles)
+
+    def aggregate_fps(self, warmup: int = 1) -> float:
+        """System throughput: the sum of the members' steady-state rates —
+        the multi-batch metric of Fig. 6(b) / Table III."""
+        if not self.members:
+            return self.throughput_fps(warmup)
+        return sum(m.throughput_fps(warmup) for m in self.members)
 
     def latency_seconds(self, skip_warmup: int = 1) -> float:
-        lats = self.round_latencies_cycles[skip_warmup:] or self.round_latencies_cycles
-        if not lats:
-            return 0.0
-        return (sum(lats) / len(lats)) / self.sys_clk_hz
+        return _mean_latency(self.round_latencies_cycles, skip_warmup, self.sys_clk_hz)
+
+    def member_latency_seconds(self, skip_warmup: int = 1) -> float:
+        """System latency: the slowest member pipeline (paper Sec. V-A)."""
+        if not self.members:
+            return self.latency_seconds(skip_warmup)
+        return max(m.latency_seconds(skip_warmup) for m in self.members)
 
     def busy_fraction(self, pid: int) -> float:
         cp = self.pu_stats[pid][Group.CP]
@@ -63,8 +132,17 @@ class MultiPUSimulator:
 
     def __init__(self, pus: Optional[list[PUSpec]] = None, trace: bool = False) -> None:
         self.pus = pus if pus is not None else make_u50_system()
+        self._trace = trace
+        self.reset()
+
+    def reset(self) -> None:
+        """Fresh kernel/ICU/ISU/HBM state on the *same fixed hardware*.
+
+        This is the simulator analogue of the paper's headline feature: the
+        PU array (the FPGA bitstream) never changes; switching deployment
+        strategies only swaps the instruction programs loaded next."""
         self.kernel = Kernel()
-        self.kernel.trace_enabled = trace
+        self.kernel.trace_enabled = self._trace
         self.isu = ISUNetwork(self.kernel, self.pus)
         self.hbm_channels: dict[int, Semaphore] = {
             c: self.kernel.semaphore(1, f"hbm{c}") for c in range(N_HBM_CHANNELS)
@@ -85,38 +163,70 @@ class MultiPUSimulator:
         until_cycles: float = float("inf"),
         first_pid: Optional[int] = None,
         last_pid: Optional[int] = None,
+        members: Optional[list[PipelineMember]] = None,
     ) -> SimResult:
         """Load + start all programs, run to completion (or ``until_cycles``).
 
-        ``first_pid``/``last_pid`` identify the pipeline entry/exit PUs for
-        latency accounting (default: first/last program in the list)."""
+        ``members`` lists the entry/exit PUs of each concurrent member
+        pipeline for latency accounting. Without it, the programs form one
+        pipeline whose entry/exit default to ``first_pid``/``last_pid`` (or
+        the first/last program in the list)."""
         if not programs:
             raise ValueError("no programs")
+        if members is not None and (first_pid is not None or last_pid is not None):
+            raise ValueError("pass either members or first_pid/last_pid, not both")
         for prog in programs:
             self.icus[prog.pid].start(prog)
         end = self.kernel.run(until=until_cycles)
 
-        first = first_pid if first_pid is not None else programs[0].pid
-        last = last_pid if last_pid is not None else programs[-1].pid
+        if members is None:
+            first = first_pid if first_pid is not None else programs[0].pid
+            last = last_pid if last_pid is not None else programs[-1].pid
+            members = [PipelineMember(first_pid=first, last_pid=last)]
         stats = {p.pid: self.icus[p.pid].stats for p in self.pus}
+        clk = self.pus[0].sys_clk_hz if self.pus else SYS_CLK_HZ
 
-        ld_starts = stats[first][Group.LD].round_start_times
-        st_ends = stats[last][Group.ST].round_end_times
-        nrounds = min(len(ld_starts), len(st_ends))
-        latencies = [st_ends[r] - ld_starts[r] for r in range(nrounds)]
+        member_results: list[MemberSimResult] = []
+        for m in members:
+            ld_starts = stats[m.first_pid][Group.LD].round_start_times
+            st_ends = stats[m.last_pid][Group.ST].round_end_times
+            nrounds = min(len(ld_starts), len(st_ends))
+            latencies = [st_ends[r] - ld_starts[r] for r in range(nrounds)]
+            member_results.append(
+                MemberSimResult(
+                    member=m,
+                    sys_clk_hz=clk,
+                    end_cycles=end,
+                    rounds=len(st_ends),
+                    round_latencies_cycles=latencies,
+                    round_end_cycles=list(st_ends),
+                )
+            )
+
+        # System-level view: the merged round-completion stream, with each
+        # round's latency carried along so warmup skipping stays aligned.
+        tagged: list[tuple[float, Optional[float]]] = []
+        for mr in member_results:
+            lats = mr.round_latencies_cycles
+            for r, end_c in enumerate(mr.round_end_cycles):
+                tagged.append((end_c, lats[r] if r < len(lats) else None))
+        tagged.sort(key=lambda t: t[0])
+        merged_ends = [t[0] for t in tagged]
+        merged_lats = [t[1] for t in tagged if t[1] is not None]
 
         # Deadlock: processes still pending but no events left before horizon.
         dead = bool(self.kernel.deadlocked()) and end < until_cycles
 
         return SimResult(
-            sys_clk_hz=self.pus[0].sys_clk_hz if self.pus else SYS_CLK_HZ,
+            sys_clk_hz=clk,
             end_cycles=end,
-            rounds=len(st_ends),
+            rounds=len(merged_ends),
             pu_stats=stats,
             tokens_sent=self.isu.tokens_sent,
             deadlocked=dead,
-            round_latencies_cycles=latencies,
-            round_end_cycles=list(st_ends),
+            round_latencies_cycles=merged_lats,
+            round_end_cycles=merged_ends,
+            members=member_results,
         )
 
 

@@ -1,0 +1,18 @@
+# First-class deployments (paper Sec. V): Strategy (what to run),
+# compile_deployment (how it lands on disjoint PU/channel slices),
+# Deployment (executable programs + analytic model), System (one fixed
+# machine, runtime strategy switching without reconfiguration).
+from .deployment import DeployedMember, Deployment, compile_deployment
+from .resources import MemberResources, partition_resources
+from .strategy import Strategy
+from .system import System
+
+__all__ = [
+    "DeployedMember",
+    "Deployment",
+    "MemberResources",
+    "Strategy",
+    "System",
+    "compile_deployment",
+    "partition_resources",
+]

@@ -1,0 +1,180 @@
+"""Compile a :class:`Strategy` into an executable :class:`Deployment`.
+
+``compile_deployment(graph, strategy)`` runs the full compilation framework
+(Fig. 4) once per member pipeline on a disjoint PU/HBM-channel slice of the
+machine and bundles the results: merged instruction programs ready for the
+discrete-event simulator (or the hardware), per-member placement, and the
+analytic aggregate performance model (throughput = sum of members, system
+latency = slowest member, CE over the assigned PUs) that the DSE caches.
+
+This is the uniform executable form of every DSE design point: DP-A is a
+one-member deployment, DP-B/DP-C are multi-member ones — all produced by the
+same call and all loadable into :class:`repro.deploy.System`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from ..compiler.compile import CompiledModel, compile_model
+from ..compiler.graph import Graph
+from ..core.program import PUProgram
+from ..core.pu import N_HBM_CHANNELS, PUSpec, make_u50_system
+from ..core.simulator import PipelineMember
+from .resources import MemberResources, partition_resources
+from .strategy import Strategy
+
+
+@dataclass
+class DeployedMember:
+    """One member pipeline of a deployment, placed on its machine slice."""
+
+    index: int
+    config: tuple[int, int]
+    compiled: CompiledModel
+    resources: MemberResources
+
+    @property
+    def pids(self) -> tuple[int, ...]:
+        return tuple(sorted(self.compiled.pid_map.values()))
+
+    @property
+    def channels(self) -> tuple[int, ...]:
+        return self.resources.channel_pool
+
+    @property
+    def first_pid(self) -> int:
+        stages = [s.index for s in self.compiled.part.stages if s.nids]
+        return self.compiled.pid_map[min(stages)]
+
+    @property
+    def last_pid(self) -> int:
+        stages = [s.index for s in self.compiled.part.stages if s.nids]
+        return self.compiled.pid_map[max(stages)]
+
+    @property
+    def predicted_fps(self) -> float:
+        return self.compiled.predicted_fps
+
+    @property
+    def predicted_latency(self) -> float:
+        return self.compiled.predicted_latency
+
+    def sim_member(self) -> PipelineMember:
+        a, b = self.config
+        return PipelineMember(
+            first_pid=self.first_pid,
+            last_pid=self.last_pid,
+            label=f"m{self.index}({a},{b})",
+        )
+
+
+@dataclass
+class Deployment:
+    """An executable deployment: programs + placement + analytic model."""
+
+    strategy: Strategy
+    graph: Graph
+    members: list[DeployedMember]
+    pus: list[PUSpec]
+    rounds: int
+
+    @property
+    def name(self) -> str:
+        return self.strategy.name or str(self.strategy)
+
+    @property
+    def batch(self) -> int:
+        return len(self.members)
+
+    # -- executable form -----------------------------------------------------
+    def programs(self, rounds: Optional[int] = None) -> list[PUProgram]:
+        """The merged per-PU instruction programs of all members.
+
+        ``rounds`` overrides the per-round loop count compiled into the
+        programs by patching the terminal ProgCtrl NR field of each group —
+        the same in-BRAM field the host would rewrite on hardware."""
+        progs = [p for m in self.members for p in m.compiled.programs]
+        if rounds is None:
+            return progs
+        patched = []
+        for p in progs:
+            q = p.clone()
+            for grp in (q.ld, q.cp, q.st):
+                grp.progctrl.nr = rounds
+            patched.append(q)
+        return patched
+
+    def sim_members(self) -> list[PipelineMember]:
+        return [m.sim_member() for m in self.members]
+
+    # -- analytic model (the DSE cache, aggregated) --------------------------
+    @property
+    def predicted_throughput(self) -> float:
+        return sum(m.predicted_fps for m in self.members)
+
+    @property
+    def predicted_latency(self) -> float:
+        return max(m.predicted_latency for m in self.members)
+
+    @property
+    def used_tops(self) -> float:
+        return sum(m.compiled.used_tops for m in self.members)
+
+    def predicted_ce(self, peak_tops: Optional[float] = None) -> float:
+        """CE = achieved GOPS / peak GOPS (defaults to the assigned PUs)."""
+        peak = peak_tops if peak_tops is not None else self.used_tops
+        gops = 2.0 * self.graph.total_macs() * self.predicted_throughput / 1e9
+        return gops / (peak * 1e3) if peak else 0.0
+
+    def assert_disjoint(self) -> None:
+        """Invariant: member pipelines never share a PU or an HBM channel."""
+        pids: set[int] = set()
+        chans: set[int] = set()
+        for m in self.members:
+            if pids & set(m.pids) or chans & set(m.channels):
+                raise AssertionError(f"member {m.index} overlaps earlier members")
+            pids |= set(m.pids)
+            chans |= set(m.channels)
+
+
+def compile_deployment(
+    g: Graph,
+    strategy,
+    *,
+    pus: Optional[list[PUSpec]] = None,
+    rounds: int = 16,
+    n_io: int = 4,
+    n_channels: int = N_HBM_CHANNELS,
+) -> Deployment:
+    """Compile ``g`` under any schedule-like ``strategy`` (see
+    :meth:`Strategy.of`) into an executable deployment.
+
+    Each member pipeline is compiled by the single-pipeline framework on a
+    disjoint PU subset and HBM channel pool; the partitioning that previously
+    had to be hand-wired through ``compile_model(pid_offset=...,
+    channel_pool=...)`` happens here."""
+    strategy = Strategy.of(strategy)
+    pus = pus if pus is not None else make_u50_system()
+    placement = partition_resources(strategy, pus, n_channels=n_channels)
+
+    members: list[DeployedMember] = []
+    for res in placement:
+        a, b = res.config
+        cm = compile_model(
+            g,
+            a,
+            b,
+            pus=pus,
+            rounds=rounds,
+            n_io=n_io,
+            pid_offset=res.pid_offset if strategy.batch > 1 else None,
+            channel_pool=list(res.channel_pool) if strategy.batch > 1 else None,
+        )
+        members.append(DeployedMember(index=res.index, config=res.config,
+                                      compiled=cm, resources=res))
+
+    dep = Deployment(strategy=strategy, graph=g, members=members, pus=pus,
+                     rounds=rounds)
+    dep.assert_disjoint()
+    return dep

@@ -1,0 +1,88 @@
+"""Disjoint resource partitioning for multi-member deployments.
+
+Concurrent member pipelines must never contend: each member gets a disjoint
+PU subset (by kind, in pid order) and a disjoint HBM channel pool (Sec. V-A —
+"each batch is processed by a disjoint PU subset"; [33] motivates channel
+isolation). This logic used to leak into callers of ``compile_model`` through
+the ``pid_offset``/``channel_pool`` kwargs; it is now owned by the deploy
+layer and callers only ever see a :class:`~repro.deploy.Strategy`.
+
+Channel policy: all available channels are split proportionally to each
+member's PU count (largest-remainder rounding, minimum 3 channels per member
+when the budget allows — weights + LD + ST streams), as consecutive disjoint
+ranges. A single-member strategy therefore keeps the whole channel space,
+matching the historical single-pipeline behavior.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..core.pu import N_HBM_CHANNELS, PUSpec
+from .strategy import Strategy
+
+
+@dataclass(frozen=True)
+class MemberResources:
+    """Placement of one member pipeline on the shared machine."""
+
+    index: int
+    config: tuple[int, int]
+    pid_offset: dict[str, int]  # PUs of each kind consumed by earlier members
+    channel_pool: tuple[int, ...]
+
+
+def check_fits(strategy: Strategy, pus: list[PUSpec]) -> None:
+    n1 = sum(1 for p in pus if p.kind == "PU1x")
+    n2 = sum(1 for p in pus if p.kind == "PU2x")
+    if strategy.total_a > n1 or strategy.total_b > n2:
+        raise ValueError(
+            f"strategy {strategy} needs {strategy.total_a}x PU1x + "
+            f"{strategy.total_b}x PU2x but the system has {n1} + {n2}"
+        )
+
+
+def _channel_shares(weights: list[int], n_channels: int) -> list[int]:
+    """Integer split of ``n_channels``: every member first gets a floor of
+    min(3, n_channels // len(weights)) channels (never less than 1), then
+    the remainder is distributed proportionally to ``weights`` by largest
+    remainder. Always sums to exactly ``n_channels``."""
+    n = len(weights)
+    if n_channels < n:
+        raise ValueError(f"{n} member pipelines but only {n_channels} HBM channels")
+    floor_share = min(3, n_channels // n)
+    rem = n_channels - floor_share * n
+    total_w = sum(weights)
+    exact = [rem * w / total_w for w in weights]
+    extra = [int(e) for e in exact]
+    order = sorted(range(n), key=lambda j: exact[j] - extra[j], reverse=True)
+    for k in range(rem - sum(extra)):
+        extra[order[k]] += 1
+    return [floor_share + extra[i] for i in range(n)]
+
+
+def partition_resources(
+    strategy: Strategy,
+    pus: list[PUSpec],
+    n_channels: int = N_HBM_CHANNELS,
+) -> list[MemberResources]:
+    """Assign each member pipeline disjoint PUs (as kind offsets) and a
+    disjoint HBM channel range."""
+    check_fits(strategy, pus)
+    shares = _channel_shares([a + b for a, b in strategy.members], n_channels)
+    out: list[MemberResources] = []
+    offsets = {"PU1x": 0, "PU2x": 0}
+    chan_next = 0
+    for i, (a, b) in enumerate(strategy.members):
+        pool = tuple(range(chan_next, chan_next + shares[i]))
+        chan_next += shares[i]
+        out.append(
+            MemberResources(
+                index=i,
+                config=(a, b),
+                pid_offset=dict(offsets),
+                channel_pool=pool,
+            )
+        )
+        offsets["PU1x"] += a
+        offsets["PU2x"] += b
+    return out

@@ -1,0 +1,113 @@
+"""Deployment strategies (paper Sec. V): a uniform value type for *what to
+run on the PU array*, independent of how it was found.
+
+A :class:`Strategy` is a tuple of member pipeline configurations ``(a, b)`` —
+``a`` PU1x + ``b`` PU2x units pipelining one batch. One member is classic
+pipeline parallelism (DP-A); several members on disjoint PU subsets are
+batch-level / hybrid parallelism (DP-B, DP-C). DSE points
+(``SingleBatchPoint`` / ``MultiBatchSchedule``), raw ``(a, b)`` tuples and
+tuples thereof all normalize through :meth:`Strategy.of`, so any Step-1/2
+schedule is directly compilable by :func:`repro.deploy.compile_deployment`.
+"""
+from __future__ import annotations
+
+import numbers
+from dataclasses import dataclass, field
+from typing import Any
+
+
+@dataclass(frozen=True)
+class Strategy:
+    """A deployment strategy: one (a, b) pipeline config per concurrent batch."""
+
+    members: tuple[tuple[int, int], ...]
+    name: str = field(default="", compare=False)
+
+    def __post_init__(self) -> None:
+        if not self.members:
+            raise ValueError("strategy needs at least one member pipeline")
+        norm = []
+        for m in self.members:
+            t = tuple(m)
+            if len(t) != 2:
+                raise ValueError(f"malformed member config {m!r}")
+            try:
+                a, b = int(t[0]), int(t[1])
+            except (TypeError, ValueError) as e:
+                raise ValueError(f"malformed member config {m!r}") from e
+            # integral floats / numpy ints normalize to plain ints
+            if a != t[0] or b != t[1] or a < 0 or b < 0:
+                raise ValueError(f"malformed member config {m!r}")
+            if a + b == 0:
+                raise ValueError("member config (0, 0) uses no PU")
+            norm.append((a, b))
+        object.__setattr__(self, "members", tuple(norm))
+
+    # -- constructors --------------------------------------------------------
+    @staticmethod
+    def single(a: int, b: int, name: str = "") -> "Strategy":
+        """A single-batch pipeline across ``a`` PU1x + ``b`` PU2x."""
+        s = Strategy(members=((a, b),), name=name)  # normalizes a/b to ints
+        if not name:
+            na, nb = s.members[0]
+            s = Strategy(members=s.members, name=f"pipeline({na},{nb})")
+        return s
+
+    @staticmethod
+    def multi(configs, name: str = "") -> "Strategy":
+        """A multi-batch schedule: one member pipeline per concurrent batch."""
+        try:
+            members = tuple(tuple(c) for c in configs)
+        except TypeError as e:
+            raise ValueError(f"malformed member configs {configs!r}") from e
+        s = Strategy(members=members, name=name)
+        if not name:
+            s = Strategy(members=s.members, name="+".join(
+                f"({a},{b})" for a, b in s.members))
+        return s
+
+    @staticmethod
+    def of(obj: Any, name: str = "") -> "Strategy":
+        """Normalize any schedule-like object into a Strategy.
+
+        Accepts a Strategy, a DSE ``MultiBatchSchedule`` (has ``.configs``),
+        a DSE ``SingleBatchPoint`` (has ``.config``), an ``(a, b)`` pair, or
+        an iterable of ``(a, b)`` pairs."""
+        if isinstance(obj, Strategy):
+            return obj
+        cfgs = getattr(obj, "configs", None)
+        if cfgs is not None:
+            return Strategy.multi(cfgs, name=name)
+        cfg = getattr(obj, "config", None)
+        if cfg is not None:
+            return Strategy.single(*cfg, name=name)
+        seq = tuple(obj)
+        if len(seq) == 2 and all(isinstance(x, numbers.Number) for x in seq):
+            return Strategy.single(*seq, name=name)
+        return Strategy.multi(seq, name=name)
+
+    # -- properties ----------------------------------------------------------
+    @property
+    def batch(self) -> int:
+        """Concurrent batches = number of member pipelines."""
+        return len(self.members)
+
+    @property
+    def is_single(self) -> bool:
+        return len(self.members) == 1
+
+    @property
+    def total_a(self) -> int:
+        return sum(m[0] for m in self.members)
+
+    @property
+    def total_b(self) -> int:
+        return sum(m[1] for m in self.members)
+
+    @property
+    def total_pus(self) -> int:
+        return self.total_a + self.total_b
+
+    def __str__(self) -> str:
+        body = "+".join(f"({a},{b})" for a, b in self.members)
+        return f"{self.name or 'strategy'}[{body}]"

@@ -1,0 +1,71 @@
+"""Runtime sessions: one fixed PU array, hot-swappable deployments.
+
+The paper's headline capability (Sec. V): the FPGA is configured once; a host
+switches among deployment strategies — pipeline parallelism, batch-level
+parallelism, hybrids — purely by loading new instruction programs into the
+ICU BRAMs. :class:`System` is that story as an API:
+
+    system = System()                       # fixed make_u50_system() machine
+    system.load(deployment_a).run(rounds=6) # measure strategy A
+    system.switch(deployment_c).run()       # swap programs, same hardware
+
+``switch`` is exactly ``load`` with a hardware-compatibility check against
+the *current* machine — it never rebuilds the PU array, only resets the
+transient kernel/ICU/ISU state (BRAM program images, LUTRAMs, buffers), so a
+switch-then-run is bit-identical to a fresh load-then-run.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from ..core.pu import PUSpec, make_u50_system
+from ..core.simulator import MultiPUSimulator, SimResult
+from .deployment import Deployment
+
+
+class System:
+    """A session over one fixed simulated machine, executing deployments."""
+
+    def __init__(self, pus: Optional[list[PUSpec]] = None, trace: bool = False) -> None:
+        self.pus = list(pus) if pus is not None else make_u50_system()
+        self.sim = MultiPUSimulator(self.pus, trace=trace)
+        self.deployment: Optional[Deployment] = None
+        self.history: list[tuple[str, SimResult]] = []
+
+    # -- deployment lifecycle ------------------------------------------------
+    def _check_compatible(self, deployment: Deployment) -> None:
+        if list(deployment.pus) != self.pus:
+            raise ValueError(
+                f"deployment {deployment.name!r} was compiled for different "
+                "hardware than this system (PU array is fixed at session start)"
+            )
+
+    def load(self, deployment: Deployment) -> "System":
+        """Stage ``deployment`` as the active strategy (chainable)."""
+        self._check_compatible(deployment)
+        self.deployment = deployment
+        return self
+
+    def switch(self, deployment: Deployment) -> "System":
+        """Swap to another strategy on the *unchanged* hardware.
+
+        Equivalent to :meth:`load`; requires that a deployment is already
+        active, which is what makes it a switch."""
+        if self.deployment is None:
+            raise RuntimeError("nothing loaded yet — use System.load first")
+        return self.load(deployment)
+
+    def run(self, rounds: Optional[int] = None, *,
+            until_cycles: float = float("inf")) -> SimResult:
+        """Execute the active deployment for ``rounds`` program rounds
+        (default: the round count it was compiled with)."""
+        if self.deployment is None:
+            raise RuntimeError("no deployment loaded — use System.load first")
+        self.sim.reset()  # clear transient state; the PU array persists
+        res = self.sim.run(
+            self.deployment.programs(rounds),
+            members=self.deployment.sim_members(),
+            until_cycles=until_cycles,
+        )
+        self.history.append((self.deployment.name, res))
+        return res

@@ -4,6 +4,7 @@ from .explorer import (
     DSEResult,
     MultiBatchSchedule,
     SingleBatchPoint,
+    ValidationRecord,
     enumerate_multi_batch,
     enumerate_single_batch,
     explore,
@@ -14,6 +15,7 @@ __all__ = [
     "DSEResult",
     "MultiBatchSchedule",
     "SingleBatchPoint",
+    "ValidationRecord",
     "enumerate_multi_batch",
     "enumerate_single_batch",
     "explore",

@@ -141,12 +141,50 @@ def enumerate_multi_batch(
     return schedules
 
 
+@dataclass(frozen=True)
+class ValidationRecord:
+    """Analytic-cache cross-check: one schedule simulated end to end."""
+
+    configs: tuple[tuple[int, int], ...]
+    analytic_fps: float
+    simulated_fps: float
+
+    @property
+    def rel_err(self) -> float:
+        if not self.analytic_fps:
+            return float("inf")
+        return abs(self.simulated_fps - self.analytic_fps) / self.analytic_fps
+
+
 @dataclass
 class DSEResult:
     single: list[SingleBatchPoint]
     multi: list[MultiBatchSchedule]
     single_frontier: list[SingleBatchPoint]
     multi_frontier: list[MultiBatchSchedule]
+    # deployment context: what was explored, on which machine
+    graph: Optional[Graph] = None
+    pus: Optional[list[PUSpec]] = None
+    validation: list[ValidationRecord] = field(default_factory=list)
+
+    def deploy(self, point_or_schedule, *, rounds: int = 16):
+        """Compile any Step-1 point / Step-2 schedule (or raw config tuple)
+        of this exploration into an executable Deployment — every DSE design
+        point is one call away from the simulator."""
+        if self.graph is None:
+            raise ValueError("this DSEResult carries no graph to deploy")
+        from ..deploy import Strategy, compile_deployment
+
+        return compile_deployment(
+            self.graph, Strategy.of(point_or_schedule), pus=self.pus, rounds=rounds
+        )
+
+    def simulate(self, point_or_schedule, *, rounds: int = 5):
+        """Deploy + execute on a fresh fixed system; returns the SimResult."""
+        from ..deploy import System
+
+        dep = self.deploy(point_or_schedule, rounds=rounds)
+        return System(pus=self.pus).load(dep).run()
 
     # paper design points -----------------------------------------------------
     @property
@@ -172,8 +210,15 @@ class DSEResult:
 
 
 def explore(g: Graph, *, n_pu1x: int = 5, n_pu2x: int = 5,
-            tolerance: float = 0.0) -> DSEResult:
-    single, _ = enumerate_single_batch(g, n_pu1x=n_pu1x, n_pu2x=n_pu2x)
+            tolerance: float = 0.0, pus: Optional[list[PUSpec]] = None,
+            validate: int = 0, validate_rounds: int = 5) -> DSEResult:
+    """Run the three DSE steps; optionally cross-check the analytic cache.
+
+    ``validate=N`` deploys + simulates up to N schedules (the design points
+    DP-A/C/B first, then the throughput-ordered multi-batch frontier) and
+    records analytic-vs-simulated throughput in ``DSEResult.validation``."""
+    pus = pus if pus is not None else make_u50_system()
+    single, _ = enumerate_single_batch(g, n_pu1x=n_pu1x, n_pu2x=n_pu2x, pus=pus)
     multi = enumerate_multi_batch(single, n_pu1x=n_pu1x, n_pu2x=n_pu2x)
     sf = pareto_front(
         single, [lambda p: p.fps, lambda p: -p.latency], tolerance=tolerance
@@ -181,4 +226,28 @@ def explore(g: Graph, *, n_pu1x: int = 5, n_pu2x: int = 5,
     mf = pareto_front(
         multi, [lambda s: s.throughput, lambda s: -s.latency], tolerance=tolerance
     )
-    return DSEResult(single=single, multi=multi, single_frontier=sf, multi_frontier=mf)
+    res = DSEResult(single=single, multi=multi, single_frontier=sf,
+                    multi_frontier=mf, graph=g, pus=pus)
+    if validate > 0:
+        candidates: list = []
+        for dp in ("dp_a", "dp_c", "dp_b"):
+            try:
+                candidates.append(getattr(res, dp))
+            except LookupError:
+                pass
+        seen = {getattr(c, "configs", None) or (c.config,) for c in candidates}
+        for s in sorted(mf, key=lambda s: -s.throughput):
+            if s.configs not in seen:
+                candidates.append(s)
+                seen.add(s.configs)
+        for cand in candidates[:validate]:
+            sim = res.simulate(cand, rounds=validate_rounds)
+            analytic = getattr(cand, "throughput", None) or cand.fps
+            res.validation.append(
+                ValidationRecord(
+                    configs=getattr(cand, "configs", None) or (cand.config,),
+                    analytic_fps=analytic,
+                    simulated_fps=sim.aggregate_fps(warmup=2),
+                )
+            )
+    return res

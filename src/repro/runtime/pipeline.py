@@ -28,7 +28,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+try:  # jax >= 0.6 exports shard_map at top level
+    from jax import shard_map
+except ImportError:  # older jax keeps it under experimental
+    from jax.experimental.shard_map import shard_map
+
+import inspect
+
+# The replication-check kwarg was renamed check_rep -> check_vma across jax
+# versions; pass whichever this jax understands.
+_SHMAP_NOCHECK = (
+    {"check_vma": False}
+    if "check_vma" in inspect.signature(shard_map).parameters
+    else {"check_rep": False}
+)
 
 from ..configs.base import ArchConfig
 from ..core.isa import Compute, Group, Opcode, Sync
@@ -273,7 +287,7 @@ def make_pipeline_forward(cfg: ArchConfig, plan: PipelinePlan, mesh: Mesh):
             mesh=mesh,
             in_specs=(pspec_params, P()),
             out_specs=P("stage"),
-            check_vma=False,
+            **_SHMAP_NOCHECK,
         )(params, tokens)
         # logits live on the last stage; slice it out
         return out[-1]

@@ -1,0 +1,182 @@
+"""Deployment layer tests (paper Sec. V): Strategy normalization, disjoint
+resource partitioning, DP-A/B/C compiled to executable deployments, System
+load/switch/run on one fixed machine, and simulated-vs-analytic agreement."""
+import pytest
+
+from repro.compiler import zoo
+from repro.core.pu import make_u50_system
+from repro.deploy import Strategy, System, compile_deployment, partition_resources
+from repro.dse import explore
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return zoo.resnet50(256)
+
+
+@pytest.fixture(scope="module")
+def dse(graph):
+    return explore(graph)
+
+
+@pytest.fixture(scope="module")
+def system():
+    return System()
+
+
+@pytest.fixture(scope="module")
+def dep_a(graph, dse):
+    return dse.deploy(dse.dp_a, rounds=6)
+
+
+@pytest.fixture(scope="module")
+def dep_b(graph, dse):
+    return dse.deploy(dse.dp_b, rounds=5)
+
+
+@pytest.fixture(scope="module")
+def dep_c(graph, dse):
+    return dse.deploy(dse.dp_c, rounds=5)
+
+
+@pytest.fixture(scope="module")
+def sim_a(system, dep_a):
+    return system.load(dep_a).run()
+
+
+@pytest.fixture(scope="module")
+def sim_b(system, sim_a, dep_b):
+    return system.switch(dep_b).run()
+
+
+@pytest.fixture(scope="module")
+def sim_c(system, sim_b, dep_c):
+    return system.switch(dep_c).run()
+
+
+class TestStrategy:
+    def test_of_accepts_all_schedule_forms(self, dse):
+        assert Strategy.of((5, 5)).members == ((5, 5),)
+        assert Strategy.of([(1, 0), (0, 1)]).members == ((1, 0), (0, 1))
+        assert Strategy.of(dse.dp_a).members == ((5, 5),)
+        assert Strategy.of(dse.dp_c).members == dse.dp_c.configs
+        s = Strategy.single(2, 3)
+        assert Strategy.of(s) is s
+
+    def test_rejects_degenerate(self):
+        with pytest.raises(ValueError):
+            Strategy.multi([])
+        with pytest.raises(ValueError):
+            Strategy.multi([(0, 0)])
+
+    def test_totals(self):
+        s = Strategy.multi([(1, 0), (2, 3)])
+        assert (s.total_a, s.total_b, s.batch) == (3, 3, 2)
+
+
+class TestResourcePartitioning:
+    def test_members_get_disjoint_channels(self):
+        strat = Strategy.of([(1, 0)] * 5 + [(0, 1)] * 5)
+        res = partition_resources(strat, make_u50_system())
+        seen = set()
+        for r in res:
+            assert len(r.channel_pool) >= 3
+            assert not (seen & set(r.channel_pool))
+            seen |= set(r.channel_pool)
+        assert len(seen) == 32  # the whole channel space is put to work
+
+    def test_oversubscription_rejected(self):
+        with pytest.raises(ValueError):
+            partition_resources(Strategy.of([(5, 5), (1, 0)]), make_u50_system())
+
+
+class TestCompiledDeployments:
+    def test_dp_c_disjoint_pus_and_channels(self, dep_c):
+        dep_c.assert_disjoint()
+        all_pids = sorted(pid for m in dep_c.members for pid in m.pids)
+        assert all_pids == list(range(10))  # one PU per member, all ten used
+        assert dep_c.batch == 10
+
+    def test_dp_b_disjoint(self, dep_b, dse):
+        dep_b.assert_disjoint()
+        assert dep_b.batch == dse.dp_b.batch
+
+    def test_analytic_model_matches_dse_cache(self, dep_b, dep_c, dse):
+        """The deployment aggregates reproduce the Step-2 schedule metrics."""
+        assert dep_b.predicted_throughput == pytest.approx(dse.dp_b.throughput)
+        assert dep_b.predicted_latency == pytest.approx(dse.dp_b.latency)
+        assert dep_c.predicted_throughput == pytest.approx(dse.dp_c.throughput)
+
+    def test_rounds_override_patches_programs(self, dep_a):
+        progs = dep_a.programs(rounds=3)
+        assert all(p.ld.progctrl.nr == 3 for p in progs)
+        # the compiled originals are untouched
+        assert all(p.ld.progctrl.nr == dep_a.rounds
+                   for m in dep_a.members for p in m.compiled.programs)
+
+
+class TestSystemExecution:
+    def test_dp_a_throughput_within_10pct_of_analytic(self, dep_a, sim_a):
+        assert not sim_a.deadlocked
+        meas = sim_a.aggregate_fps(warmup=2)
+        assert meas == pytest.approx(dep_a.predicted_throughput, rel=0.10)
+
+    def test_dp_b_throughput_within_10pct_of_analytic(self, dep_b, sim_b):
+        assert not sim_b.deadlocked
+        meas = sim_b.aggregate_fps(warmup=2)
+        assert meas == pytest.approx(dep_b.predicted_throughput, rel=0.10)
+
+    def test_dp_c_throughput_within_10pct_of_analytic(self, dep_c, sim_c):
+        assert not sim_c.deadlocked
+        meas = sim_c.aggregate_fps(warmup=2)
+        assert meas == pytest.approx(dep_c.predicted_throughput, rel=0.10)
+
+    def test_per_member_latency_accounting(self, dep_c, sim_c):
+        assert len(sim_c.members) == 10
+        for m, dm in zip(sim_c.members, dep_c.members):
+            assert m.rounds == 5
+            assert m.member.first_pid == dm.first_pid
+            assert m.latency_seconds() > 0
+            # a one-PU member's latency tracks its own analytic prediction
+            assert m.latency_seconds() == pytest.approx(dm.predicted_latency, rel=0.35)
+        # system latency = slowest member
+        assert sim_c.member_latency_seconds() == pytest.approx(
+            max(m.latency_seconds() for m in sim_c.members))
+
+    def test_switch_matches_fresh_load(self, dep_c, sim_c):
+        """A switch-then-run is bit-identical to a fresh session's load-run:
+        switching leaves no residue on the fixed machine."""
+        fresh = System().load(dep_c).run()
+        assert fresh.aggregate_fps(warmup=2) == pytest.approx(
+            sim_c.aggregate_fps(warmup=2), rel=1e-9)
+        assert fresh.round_end_cycles == sim_c.round_end_cycles
+
+    def test_switch_requires_loaded_deployment(self, dep_a):
+        with pytest.raises(RuntimeError):
+            System().switch(dep_a)
+
+    def test_incompatible_hardware_rejected(self, graph):
+        pus = [p for p in make_u50_system() if p.pid not in (4, 9)]  # 4+4 PUs
+        dep = compile_deployment(graph, (2, 2), pus=pus, rounds=2)
+        with pytest.raises(ValueError):
+            System().load(dep)
+
+    def test_session_history_records_switches(self, system, sim_a, sim_b, sim_c):
+        names = [n for n, _ in system.history]
+        assert len(names) >= 3
+
+
+class TestDSEIntegration:
+    def test_every_frontier_point_is_deployable(self, dse):
+        """Any Step-2 schedule is one call away from an executable form."""
+        s = min(dse.multi_frontier, key=lambda s: s.batch)
+        dep = dse.deploy(s, rounds=2)
+        assert dep.batch == s.batch
+        assert dep.predicted_throughput == pytest.approx(s.throughput)
+
+    def test_explore_validate_cross_checks_cache(self, graph):
+        res = explore(graph, validate=1, validate_rounds=4)
+        assert len(res.validation) == 1
+        rec = res.validation[0]
+        assert rec.configs == (res.dp_a.config,)
+        assert rec.rel_err < 0.10

@@ -1,7 +1,17 @@
 """ISA unit tests: 64-bit encode/decode round-trips + Table I(b) dynamic
-state-update algorithms (AddrCyc, Sync)."""
+state-update algorithms (AddrCyc, Sync).
+
+``hypothesis`` is an optional dev dependency: when present, the round-trip
+and BID-cycling properties are checked on random inputs; without it they
+degrade to the same checks over a fixed example grid."""
 import pytest
-from hypothesis import given, strategies as st
+
+try:
+    from hypothesis import given, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.isa import (
     AddrCyc,
@@ -60,14 +70,33 @@ def test_datamove_length_rounds_up_to_beat():
     assert back.length == 1024
 
 
-@given(
-    ba=st.integers(0, (1 << 20) - 1),
-    aoffs=st.integers(0, (1 << 14) - 1),
-    nc=st.integers(0, 127),
-)
-def test_addrcyc_roundtrip_hypothesis(ba, aoffs, nc):
+def _check_addrcyc_roundtrip(ba, aoffs, nc):
     inst = AddrCyc(ba=ba * 64, aoffs=aoffs * 64, nc=nc, ic=nc)
     assert Instruction.decode(inst.encode()) == inst
+
+
+ADDRCYC_EXAMPLES = [
+    (0, 0, 0),
+    (1, 1, 1),
+    (12345, 77, 3),
+    ((1 << 20) - 1, (1 << 14) - 1, 127),
+]
+
+if HAVE_HYPOTHESIS:
+
+    @given(
+        ba=st.integers(0, (1 << 20) - 1),
+        aoffs=st.integers(0, (1 << 14) - 1),
+        nc=st.integers(0, 127),
+    )
+    def test_addrcyc_roundtrip_hypothesis(ba, aoffs, nc):
+        _check_addrcyc_roundtrip(ba, aoffs, nc)
+
+else:
+
+    @pytest.mark.parametrize("ba,aoffs,nc", ADDRCYC_EXAMPLES)
+    def test_addrcyc_roundtrip_hypothesis(ba, aoffs, nc):
+        _check_addrcyc_roundtrip(ba, aoffs, nc)
 
 
 # --------------------------------------------------- Table I(b) algorithms --
@@ -121,12 +150,26 @@ def test_sync_bid_depth4_rotation():
     assert bids[:8] == [2, 3, 4, 5, 2, 3, 4, 5]
 
 
-@given(nc=st.integers(1, 12), base=st.integers(0, 7), steps=st.integers(1, 60))
-def test_sync_bid_cycle_property(nc, base, steps):
+def _check_sync_bid_cycle(nc, base, steps):
     s = Sync(op=Opcode.WAIT_REQ, pid=0, bid=base, base_bid=base, nc=nc, ic=nc)
     for i in range(steps):
         assert s.bid == base + (i % (nc + 1))
         s.step()
+
+
+SYNC_CYCLE_EXAMPLES = [(1, 0, 6), (3, 2, 17), (7, 7, 60), (12, 0, 25)]
+
+if HAVE_HYPOTHESIS:
+
+    @given(nc=st.integers(1, 12), base=st.integers(0, 7), steps=st.integers(1, 60))
+    def test_sync_bid_cycle_property(nc, base, steps):
+        _check_sync_bid_cycle(nc, base, steps)
+
+else:
+
+    @pytest.mark.parametrize("nc,base,steps", SYNC_CYCLE_EXAMPLES)
+    def test_sync_bid_cycle_property(nc, base, steps):
+        _check_sync_bid_cycle(nc, base, steps)
 
 
 # ------------------------------------------------------------ group checks --

@@ -4,6 +4,8 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
+
+pytest.importorskip("hypothesis", reason="property tests need the optional hypothesis extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention.kernel import flash_attention_tpu
