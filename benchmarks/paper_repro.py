@@ -8,6 +8,9 @@
   table3_comparison    -- Table III: our design points vs prior accelerators
   simulated_design_points -- DP-A/B/C executed on the discrete-event
                           simulator (not just the analytic model)
+  transformer_point    -- beyond the paper: the transformer frontend
+                          (ViT-Base + qwen3 encoder stack) through the same
+                          DSE, with compute efficiency and one simulated run
 """
 from __future__ import annotations
 
@@ -87,14 +90,11 @@ def fig6b_multi_batch(dse=None) -> list[str]:
     gopf = _gopf(g)
     rows = [f"fig6b.schedules,,count={len(dse.multi)};frontier={len(dse.multi_frontier)}"]
     for name, dp in (("DP-A", dse.dp_a), ("DP-B", dse.dp_b), ("DP-C", dse.dp_c)):
-        thr = getattr(dp, "throughput", None) or dp.fps
-        batch = getattr(dp, "batch", 1)
-        cfg = getattr(dp, "configs", None) or [dp.config]
-        gops = thr * gopf
+        gops = dp.throughput * gopf
         rows.append(
-            f"fig6b.{name},,batch={batch};thr_fps224eq={gops / GOPS_224EQ_PER_FRAME:.1f};"
+            f"fig6b.{name},,batch={dp.batch};thr_fps224eq={gops / GOPS_224EQ_PER_FRAME:.1f};"
             f"latency_ms={dp.latency*1e3:.2f};gops={gops:.0f};ce={gops/ (SYSTEM_PEAK_TOPS*1e3):.3f};"
-            f"configs={'+'.join(f'{a}x1_{b}x2' for a, b in cfg)}"
+            f"configs={'+'.join(f'{a}x1_{b}x2' for a, b in dp.configs)}"
         )
     return rows
 
@@ -195,6 +195,44 @@ def simulated_design_points(dse=None) -> list[str]:
     return rows
 
 
+def transformer_point() -> list[str]:
+    """The instruction compiler's transformer frontend on the same machine:
+    ViT-Base/16 at 224 (the vision analogue of ResNet-50) and a qwen3-0.6b
+    encoder stack, each through the full DSE. Reports analytic compute
+    efficiency for DP-A/B/C plus one simulated DP-A deployment per graph as
+    the conformance anchor."""
+    rows = []
+    graphs = [
+        ("vit_base_224", zoo.vit(224)),
+        ("qwen3_enc4_s256", zoo.transformer_encoder("qwen3-0.6b",
+                                                    seq_len=256, depth=4)),
+    ]
+    for gname, g in graphs:
+        gopf = _gopf(g)
+        dse = explore(g)
+        for name, dp in (("DP-A", dse.dp_a), ("DP-B", dse.dp_b), ("DP-C", dse.dp_c)):
+            thr = dp.throughput
+            gops = thr * gopf
+            rows.append(
+                f"transformer.{gname}.{name},,batch={dp.batch};"
+                f"fps={thr:.1f};gops={gops:.0f};"
+                f"ce={gops / (SYSTEM_PEAK_TOPS * 1e3):.3f};"
+                f"latency_ms={dp.latency*1e3:.2f}"
+            )
+        dep = dse.deploy(dse.dp_a, rounds=5)
+        t0 = time.perf_counter()
+        sim = System().load(dep).run()
+        wall_us = (time.perf_counter() - t0) * 1e6
+        fps = sim.aggregate_fps(warmup=2)
+        rows.append(
+            f"transformer.{gname}.sim_DP-A,{wall_us:.0f},fps={fps:.1f};"
+            f"ce={fps * gopf / (SYSTEM_PEAK_TOPS * 1e3):.3f};"
+            f"pred_err={abs(fps - dep.predicted_throughput) / dep.predicted_throughput:.3f};"
+            f"deadlock={int(sim.deadlocked)}"
+        )
+    return rows
+
+
 def run() -> list[str]:
     out = []
     g = zoo.resnet50(256)
@@ -205,4 +243,5 @@ def run() -> list[str]:
     out += fig6b_multi_batch(dse)
     out += table3_comparison(dse)
     out += simulated_design_points(dse)
+    out += transformer_point()
     return out

@@ -35,14 +35,12 @@ def main() -> None:
     print(f"step 3: Pareto frontier keeps {len(res.multi_frontier)}\n")
 
     for name, dp in (("DP-A", res.dp_a), ("DP-B", res.dp_b), ("DP-C", res.dp_c)):
-        thr = getattr(dp, "throughput", None) or dp.fps
-        cfgs = getattr(dp, "configs", None) or [dp.config]
-        gops = thr * gopf
+        gops = dp.throughput * gopf
         print(
-            f"{name}: batch={getattr(dp, 'batch', 1):2d}  "
+            f"{name}: batch={dp.batch:2d}  "
             f"fps(224eq)={gops/GOPS_224EQ:6.1f}  latency={dp.latency*1e3:5.2f} ms  "
             f"CE={gops/(PEAK_TOPS*1e3):.3f}  "
-            f"configs={'+'.join(f'({a},{b})' for a, b in cfgs)}"
+            f"configs={'+'.join(f'({a},{b})' for a, b in dp.configs)}"
         )
 
     if args.max_latency_ms or args.min_fps:

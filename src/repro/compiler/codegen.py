@@ -46,8 +46,12 @@ def _align(x: int, a: int = 4096) -> int:
     return (x + a - 1) // a * a
 
 
+_IM2COL_OPS = (OpType.CONV, OpType.FUSED_CONV_ADD, OpType.PROJ,
+               OpType.FUSED_PROJ_ADD)  # PROJ with a kernel = patch embedding
+
+
 def _adm_op(nd: Node) -> Opcode:
-    if nd.kernel != (1, 1) and nd.op in (OpType.CONV, OpType.FUSED_CONV_ADD):
+    if nd.kernel != (1, 1) and nd.op in _IM2COL_OPS:
         return Opcode.IM2COL_ADM
     if nd.stride != (1, 1):
         return Opcode.STRIDE_ADM
@@ -169,14 +173,31 @@ def generate_programs(
                 ctx.cp.append(
                     DataMove(op=Opcode.WEIGHTS_ADM, cur_ba=0, length=CHUNK_BYTES, channel=wchan)
                 )
+            # attention GEMMs: the second operand (K for the score GEMM, V
+            # for the context GEMM) is an *activation* streamed through the
+            # SA weight port — one WEIGHTS_ADM over the producer's cyclic
+            # region, counted in Compute.wchunks so the URAM read interlock
+            # holds the GEMM until the stream has landed.
+            if nd.op in (OpType.ATTN_SCORE, OpType.ATTN_CONTEXT):
+                splan = mem.tensors[nd.inputs[1]]
+                ctx.cp.append(Config(op=Opcode.URAM_PRM, param0=0))
+                ctx.cp.append(
+                    DataMove(op=Opcode.WEIGHTS_ADM, cur_ba=splan.base_addr,
+                             length=splan.region_bytes, channel=splan.read_channel)
+                )
+                ctx.cp.append(_addrcyc(splan))
+                nchunks += 1
             # 2) flush the previous node's compute ops.
             if pending_cp:
                 ctx.cp.extend(pending_cp.pop(0))
             # 3) queue this node's compute ops.
             ops: list[Instruction] = []
-            rtid = nd.residual_input if nd.residual_input is not None else (
-                nd.inputs[1] if len(nd.inputs) > 1 else None
-            )
+            if nd.op in (OpType.ATTN_SCORE, OpType.ATTN_CONTEXT):
+                rtid = None  # second input already streamed via WEIGHTS_ADM
+            else:
+                rtid = nd.residual_input if nd.residual_input is not None else (
+                    nd.inputs[1] if len(nd.inputs) > 1 else None
+                )
             if rtid is not None:
                 rplan = mem.tensors[rtid]
                 ops.append(Config(op=Opcode.RES_ADD_STRIDE_PRM, param0=1))

@@ -3,11 +3,16 @@
 Adapts the DNN graph to the PU dataflow capabilities while preserving
 computational correctness:
 
-  * Conv followed by element-wise Add fuses into FusedConvAdd(ReLU) — the PU
-    post-processing block supports residual shortcut additions in dataflow
-    (the *other* conv feeding the Add remains unchanged and its output
-    becomes the fused node's ``residual_input``).
-  * Activation functions (ReLU) integrate into the preceding compute node.
+  * A GEMM (Conv or Proj) followed by an element-wise Add fuses into
+    FusedConvAdd / FusedProjAdd — the PU post-processing block supports
+    residual shortcut additions in dataflow (the *other* producer feeding the
+    Add remains unchanged and its output becomes the fused node's
+    ``residual_input``). This covers both CNN shortcuts (Fig. 4(b1)) and the
+    transformer residual stream (attention-out + x, FFN-down + h).
+  * Activation functions (ReLU, and the vector-unit GELU/SiLU of transformer
+    FFNs) integrate into the preceding compute node: the Compute
+    instruction's vector-activation enable is set and the standalone node
+    disappears.
 
 The pass returns a new topologically-ordered Graph whose compute nodes map
 1:1 onto PU GEMM executions.
@@ -16,9 +21,17 @@ from __future__ import annotations
 
 from .graph import Graph, Node, OpType
 
+# GEMMs that can absorb a successor Add into their post-processing block.
+_FUSABLE_GEMMS = {
+    OpType.CONV: OpType.FUSED_CONV_ADD,
+    OpType.PROJ: OpType.FUSED_PROJ_ADD,
+}
+# Standalone activation nodes foldable into a preceding compute node.
+_ACT_OPS = (OpType.RELU, OpType.GELU)
+
 
 def fuse(g: Graph) -> Graph:
-    """Apply ReLU-integration and Conv+Add(+ReLU) fusion."""
+    """Apply activation-integration and GEMM+Add(+act) fusion."""
     nodes = list(g.nodes)
     consumed: set[int] = set()  # node ids folded into a fused node
     # tensor id -> producing node (pre-fusion view)
@@ -50,14 +63,30 @@ def fuse(g: Graph) -> Graph:
     for nd in nodes:
         if nd.nid in consumed:
             continue
-        if nd.op in (OpType.CONV, OpType.FC):
+        if nd.op in (OpType.CONV, OpType.FC, OpType.PROJ):
             op = nd.op
             relu = nd.relu
             residual = nd.residual_input
+            attrs = dict(nd.attrs)
             out_tid = nd.outputs[0]
 
-            # Conv -> Add fusion (residual shortcut executed in dataflow).
-            if op is OpType.CONV and residual is None:
+            # activation folding *before* the Add (proj -> act -> ... chains:
+            # FFN gate/up activations precede the residual join).
+            act_folded = False
+            nxt = sole_consumer(out_tid)
+            if nxt is not None and nxt.op in _ACT_OPS:
+                relu = True
+                act_folded = True
+                attrs.setdefault("act", nxt.attrs.get("act", "relu"))
+                consumed.add(nxt.nid)
+                out_tid = nxt.outputs[0]
+
+            # GEMM -> Add fusion (residual shortcut executed in dataflow).
+            # Not after a folded activation: the post-processing block applies
+            # act *after* the shortcut add, so fusing a GEMM->act->Add chain
+            # would reorder them (act(x+r) instead of act(x)+r) — the Add
+            # stays a standalone vector op there.
+            if op in _FUSABLE_GEMMS and residual is None and not act_folded:
                 nxt = sole_consumer(out_tid)
                 if nxt is not None and nxt.op is OpType.ADD:
                     other = [t for t in nxt.inputs if t != out_tid]
@@ -69,12 +98,13 @@ def fuse(g: Graph) -> Graph:
                         residual = other[0]
                         consumed.add(nxt.nid)
                         out_tid = nxt.outputs[0]
-                        op = OpType.FUSED_CONV_ADD
+                        op = _FUSABLE_GEMMS[op]
 
-            # (Fused)Conv -> ReLU integration.
+            # (Fused)GEMM -> activation integration after the Add.
             nxt = sole_consumer(out_tid)
-            if nxt is not None and nxt.op is OpType.RELU:
+            if nxt is not None and nxt.op in _ACT_OPS:
                 relu = True
+                attrs.setdefault("act", nxt.attrs.get("act", "relu"))
                 consumed.add(nxt.nid)
                 out_tid = nxt.outputs[0]
 
@@ -90,31 +120,39 @@ def fuse(g: Graph) -> Graph:
                 relu=relu,
                 residual_input=resolve(residual) if residual is not None else None,
                 scale_shift=nd.scale_shift,
+                attrs=attrs,
             )
-        elif nd.op is OpType.RELU:
-            # Standalone ReLU after a non-fusable producer (e.g. Add that
-            # could not fuse): keep as vector op.
+        elif nd.op in _ACT_OPS:
+            # Standalone activation after a non-fusable producer (e.g. Add
+            # that could not fuse): keep as vector op.
             new = out.add_node(
                 name=nd.name, op=nd.op,
                 inputs=[resolve(t) for t in nd.inputs],
                 outputs=list(nd.outputs),
                 m=nd.m, n=nd.n, k=nd.k,
+                scale_shift=nd.scale_shift,
+                attrs=dict(nd.attrs),
             )
-        elif nd.op is OpType.ADD:
-            # Unfused Add (both producers already consumed etc.) — vector op.
+        elif nd.op in (OpType.ADD, OpType.MUL):
+            # Unfused Add/Mul (both producers already consumed etc.) — vector
+            # op with a second operand through the residual stream.
             new = out.add_node(
                 name=nd.name, op=nd.op,
                 inputs=[resolve(t) for t in nd.inputs],
                 outputs=list(nd.outputs),
                 m=nd.m, n=nd.n, k=nd.k,
+                scale_shift=nd.scale_shift,
+                attrs=dict(nd.attrs),
             )
-        else:  # pools etc.
+        else:  # pools, layernorm, softmax, attention GEMMs, ...
             new = out.add_node(
                 name=nd.name, op=nd.op,
                 inputs=[resolve(t) for t in nd.inputs],
                 outputs=list(nd.outputs),
                 m=nd.m, n=nd.n, k=nd.k,
                 kernel=nd.kernel, stride=nd.stride, padding=nd.padding,
+                scale_shift=nd.scale_shift,
+                attrs=dict(nd.attrs),
             )
 
     # Fix up graph outputs that were aliased into fused nodes.

@@ -28,6 +28,24 @@ class OpType(enum.Enum):
     FUSED_CONV_ADD = "FusedConvAdd"  # Conv + residual Add (+ ReLU) in dataflow
     INPUT = "Input"
     OUTPUT = "Output"
+    # -- transformer frontend (GEMM-shaped primitives of the encoder block) --
+    PROJ = "Proj"  # weighted projection GEMM: Q/K/V/output, FFN up/gate/down
+    FUSED_PROJ_ADD = "FusedProjAdd"  # Proj + residual Add (+ act) in dataflow
+    ATTN_SCORE = "AttnScore"  # Q @ K^T per head: activation x activation GEMM
+    ATTN_CONTEXT = "AttnContext"  # softmax(S) @ V per head: act x act GEMM
+    SOFTMAX = "Softmax"  # vector-unit row softmax over attention scores
+    LAYERNORM = "LayerNorm"  # vector-unit normalization (LN / RMSNorm)
+    GELU = "Gelu"  # vector-unit activation (folded into PROJ by fusion)
+    MUL = "Mul"  # elementwise gate multiply (SwiGLU), vector unit
+
+
+# GEMM-shaped ops that carry weights streamed/preloaded into URAM.
+WEIGHTED_OPS = frozenset(
+    {OpType.CONV, OpType.FC, OpType.PROJ, OpType.FUSED_CONV_ADD, OpType.FUSED_PROJ_ADD}
+)
+# GEMMs whose second operand is an *activation* streamed through the weight
+# port of the systolic array (no resident weights).
+ATTN_GEMM_OPS = frozenset({OpType.ATTN_SCORE, OpType.ATTN_CONTEXT})
 
 
 @dataclass(frozen=True)
@@ -74,21 +92,22 @@ class Node:
 
     @property
     def macs(self) -> int:
-        if self.op in (OpType.CONV, OpType.FC, OpType.FUSED_CONV_ADD):
+        if self.op in WEIGHTED_OPS or self.op in ATTN_GEMM_OPS:
             return self.m * self.n * self.k
         return 0
 
     @property
     def weight_bytes(self) -> int:
         """INT8 weights + INT32 bias footprint in URAM."""
-        if self.op in (OpType.CONV, OpType.FC, OpType.FUSED_CONV_ADD):
+        if self.op in WEIGHTED_OPS:
             return self.m * self.k + 4 * self.m
         return 0
 
     @property
     def is_compute(self) -> bool:
-        return self.op in (OpType.CONV, OpType.FC, OpType.FUSED_CONV_ADD,
-                           OpType.MAXPOOL, OpType.AVGPOOL)
+        return (self.op in WEIGHTED_OPS or self.op in ATTN_GEMM_OPS
+                or self.op in (OpType.MAXPOOL, OpType.AVGPOOL, OpType.SOFTMAX,
+                               OpType.LAYERNORM, OpType.MUL))
 
 
 @dataclass

@@ -1,9 +1,20 @@
 """DNN graph builders for the compilation framework.
 
-ResNet-50 (the paper's benchmark, input 256x256 per Table III footnote) plus
-small synthetic CNNs for tests. Graphs are built *unfused* (separate Conv /
-Add / ReLU nodes, BN folded into conv weights as usual for INT8 deployment);
-``repro.compiler.fusion`` then applies the hardware-aware fusion of Fig. 4(b).
+ResNet-50 (the paper's benchmark, input 256x256 per Table III footnote),
+small synthetic CNNs for tests, and transformer encoders (ViT for the vision
+analogue of ResNet-50, LLM block stacks parameterized from ``repro.configs``).
+Graphs are built *unfused* (separate Conv / Add / activation nodes, BN folded
+into conv weights as usual for INT8 deployment); ``repro.compiler.fusion``
+then applies the hardware-aware fusion of Fig. 4(b) extended with the
+proj->activation and GEMM->residual-add rules.
+
+Transformer lowering notes: token tensors are (S, D) INT8 activations;
+attention scores are (H, S, S). Q/K/V/output projections and FFN matrices are
+PROJ GEMMs (weights through URAM, SMOF-streamed when oversized); the score
+and context GEMMs are ATTN_* ops whose second operand is an *activation*
+streamed through the SA weight port; layernorm / softmax / gating run in the
+PU vector units like ReLU and the pools. Embedding lookup, position adds and
+the cls token are host-side (free) and omitted.
 """
 from __future__ import annotations
 
@@ -143,6 +154,168 @@ def tiny_cnn(channels: tuple[int, ...] = (8, 16, 16), hw: int = 16,
         t = _add(g, t, skip, "add")
     t = _relu(g, t, "r2")
     t = _fc(g, t, 10, "fc")
+    g.output_tensors = [t.tid]
+    g.validate_topological()
+    return g
+
+
+# ------------------------------------------------------- transformer zoo --
+def _proj(g: Graph, x: TensorInfo, out_features: int, name: str) -> TensorInfo:
+    """Projection GEMM on token tensor x: (S, D) -> (S, out_features)."""
+    s, d = x.shape
+    assert out_features <= 4095, f"{name}: Compute.M is 12 bits ({out_features})"
+    assert d <= 16383, f"{name}: Compute.K is 14 bits ({d})"
+    out = g.add_tensor(f"{name}.out", (s, out_features))
+    g.add_node(name=name, op=OpType.PROJ, inputs=[x.tid], outputs=[out.tid],
+               m=out_features, n=s, k=d, scale_shift=7)
+    return out
+
+
+def _layernorm(g: Graph, x: TensorInfo, name: str) -> TensorInfo:
+    s, d = x.shape
+    out = g.add_tensor(f"{name}.out", x.shape)
+    g.add_node(name=name, op=OpType.LAYERNORM, inputs=[x.tid], outputs=[out.tid],
+               m=1, n=s, k=d)
+    return out
+
+
+def _vec_act(g: Graph, x: TensorInfo, name: str, act: str = "gelu") -> TensorInfo:
+    """Vector-unit activation node (gelu/silu); fusion folds it into the
+    preceding PROJ the way ReLU folds into Conv."""
+    s, d = x.shape
+    out = g.add_tensor(f"{name}.out", x.shape)
+    g.add_node(name=name, op=OpType.GELU, inputs=[x.tid], outputs=[out.tid],
+               m=1, n=s, k=d, attrs={"act": act})
+    return out
+
+
+def _mul(g: Graph, a: TensorInfo, b: TensorInfo, name: str) -> TensorInfo:
+    s, d = a.shape
+    out = g.add_tensor(f"{name}.out", a.shape)
+    g.add_node(name=name, op=OpType.MUL, inputs=[a.tid, b.tid], outputs=[out.tid],
+               m=1, n=s, k=d)
+    return out
+
+
+def _token_add(g: Graph, a: TensorInfo, b: TensorInfo, name: str) -> TensorInfo:
+    s, d = a.shape
+    out = g.add_tensor(f"{name}.out", a.shape)
+    g.add_node(name=name, op=OpType.ADD, inputs=[a.tid, b.tid], outputs=[out.tid],
+               m=1, n=s, k=d)
+    return out
+
+
+def _attention(g: Graph, x: TensorInfo, heads: int, kv_heads: int, head_dim: int,
+               name: str) -> TensorInfo:
+    """Multi-head (optionally grouped-query) self-attention on (S, D) tokens.
+
+    Q/K/V and the output projection are PROJ GEMMs. The score GEMM
+    (Q @ K^T per head, M=S, N=H*S, K=head_dim) and the context GEMM
+    (softmax(S) @ V, M=head_dim, N=H*S, K=S) take their second operand from
+    an activation tensor streamed through the SA weight port; softmax runs in
+    the vector units. MACs: H*S^2*hd each for score and context."""
+    s, d = x.shape
+    assert s <= 4095, f"{name}: score-GEMM M (seq) is 12 bits ({s})"
+    assert heads * s <= 65535, \
+        f"{name}: score/context-GEMM N (heads*seq) is 16 bits ({heads * s})"
+    q = _proj(g, x, heads * head_dim, f"{name}.wq")
+    k = _proj(g, x, kv_heads * head_dim, f"{name}.wk")
+    v = _proj(g, x, kv_heads * head_dim, f"{name}.wv")
+
+    scores = g.add_tensor(f"{name}.scores", (heads, s, s))
+    g.add_node(name=f"{name}.score", op=OpType.ATTN_SCORE,
+               inputs=[q.tid, k.tid], outputs=[scores.tid],
+               m=s, n=heads * s, k=head_dim, scale_shift=7)
+    probs = g.add_tensor(f"{name}.probs", (heads, s, s))
+    g.add_node(name=f"{name}.softmax", op=OpType.SOFTMAX,
+               inputs=[scores.tid], outputs=[probs.tid],
+               m=1, n=heads * s, k=s)
+    ctx = g.add_tensor(f"{name}.ctx", (s, heads * head_dim))
+    g.add_node(name=f"{name}.context", op=OpType.ATTN_CONTEXT,
+               inputs=[probs.tid, v.tid], outputs=[ctx.tid],
+               m=head_dim, n=heads * s, k=s, scale_shift=7)
+    return _proj(g, ctx, d, f"{name}.wo")
+
+
+def _encoder_block(g: Graph, x: TensorInfo, heads: int, kv_heads: int,
+                   head_dim: int, d_ff: int, mlp: str, name: str) -> TensorInfo:
+    """Pre-norm encoder block: LN -> MHA -> +res -> LN -> FFN -> +res."""
+    attn_out = _attention(g, _layernorm(g, x, f"{name}.ln1"), heads, kv_heads,
+                          head_dim, f"{name}.attn")
+    h = _token_add(g, attn_out, x, f"{name}.add1")
+
+    t = _layernorm(g, h, f"{name}.ln2")
+    if mlp in ("swiglu", "geglu"):
+        act = "silu" if mlp == "swiglu" else "gelu"
+        gate = _vec_act(g, _proj(g, t, d_ff, f"{name}.ffn.gate"),
+                        f"{name}.ffn.{act}", act=act)
+        up = _proj(g, t, d_ff, f"{name}.ffn.up")
+        t = _mul(g, gate, up, f"{name}.ffn.mul")
+    else:
+        t = _vec_act(g, _proj(g, t, d_ff, f"{name}.ffn.up"), f"{name}.ffn.act")
+    down = _proj(g, t, x.shape[1], f"{name}.ffn.down")
+    return _token_add(g, down, h, f"{name}.add2")
+
+
+def vit(input_hw: int = 224, *, patch: int = 16, d_model: int = 768,
+        depth: int = 12, heads: int = 12, d_ff: int = 3072,
+        n_classes: int = 1000) -> Graph:
+    """ViT-Base/16 (default): the vision analogue of ResNet-50 on the same
+    GEMM-centric ISA. Patch embedding is an IM2COL GEMM over 16x16x3
+    patches; then ``depth`` pre-norm encoder blocks, mean-pool, classifier."""
+    assert input_hw % patch == 0
+    n_tokens = (input_hw // patch) ** 2
+    assert n_tokens <= 4095, f"token count {n_tokens} exceeds the 12-bit M field"
+    g = Graph(name=f"vit{depth}_{input_hw}")
+    img = g.add_tensor("input", (3, input_hw, input_hw))
+    g.input_tensors = [img.tid]
+
+    # patch embed: conv k=patch s=patch lowered as an IM2COL projection GEMM
+    tok = g.add_tensor("patch_embed.out", (n_tokens, d_model))
+    g.add_node(name="patch_embed", op=OpType.PROJ,
+               inputs=[img.tid], outputs=[tok.tid],
+               m=d_model, n=n_tokens, k=3 * patch * patch,
+               kernel=(patch, patch), stride=(patch, patch), scale_shift=7)
+
+    t = tok
+    for i in range(depth):
+        t = _encoder_block(g, t, heads, heads, d_model // heads, d_ff,
+                           "gelu", f"block{i}")
+    t = _layernorm(g, t, "ln_f")
+
+    pooled = g.add_tensor("pool.out", (d_model,))
+    g.add_node(name="pool", op=OpType.AVGPOOL, inputs=[t.tid],
+               outputs=[pooled.tid], m=d_model, n=1, k=n_tokens)
+    head = _fc(g, pooled, n_classes, "head")
+    g.output_tensors = [head.tid]
+    g.validate_topological()
+    return g
+
+
+def transformer_encoder(arch="qwen3-0.6b", *, seq_len: int = 256,
+                        depth: int | None = None) -> Graph:
+    """Decoder-block stack of a ``repro.configs`` architecture as a prefill
+    graph: ``depth`` (default: the config's layer count) blocks over a
+    (seq_len, d_model) token tensor. ``arch`` is a config name or an
+    ``ArchConfig`` instance (e.g. ``get_config("gemma3-4b").reduced()`` for
+    architectures whose full dims exceed the ISA field widths). Embedding
+    lookup / lm_head stay on the host; causality does not change GEMM shapes
+    at this fidelity."""
+    from ..configs import get_config
+
+    cfg = get_config(arch) if isinstance(arch, str) else arch
+    n_layers = depth if depth is not None else cfg.num_layers
+    assert seq_len <= 4095, "ATTN_SCORE M field is 12 bits"
+    g = Graph(name=f"{cfg.name.replace('.', '_')}_enc{n_layers}_s{seq_len}")
+    x = g.add_tensor("input", (seq_len, cfg.d_model))
+    g.input_tensors = [x.tid]
+
+    t = x
+    for i in range(n_layers):
+        t = _encoder_block(g, t, cfg.num_heads, cfg.num_kv_heads,
+                           cfg.resolved_head_dim, cfg.d_ff, cfg.mlp,
+                           f"block{i}")
+    t = _layernorm(g, t, "ln_f")
     g.output_tensors = [t.tid]
     g.validate_topological()
     return g

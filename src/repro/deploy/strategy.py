@@ -75,12 +75,14 @@ class Strategy:
         an iterable of ``(a, b)`` pairs."""
         if isinstance(obj, Strategy):
             return obj
-        cfgs = getattr(obj, "configs", None)
-        if cfgs is not None:
-            return Strategy.multi(cfgs, name=name)
+        # single points first: SingleBatchPoint also exposes a uniform
+        # .configs view, but keeps its pipeline(a,b) naming through .config
         cfg = getattr(obj, "config", None)
         if cfg is not None:
             return Strategy.single(*cfg, name=name)
+        cfgs = getattr(obj, "configs", None)
+        if cfgs is not None:
+            return Strategy.multi(cfgs, name=name)
         seq = tuple(obj)
         if len(seq) == 2 and all(isinstance(x, numbers.Number) for x in seq):
             return Strategy.single(*seq, name=name)

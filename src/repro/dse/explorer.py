@@ -40,6 +40,8 @@ class SingleBatchPoint:
     def config(self) -> tuple[int, int]:
         return (self.a, self.b)
 
+    # uniform schedule-like view (shared with MultiBatchSchedule) so DSE
+    # consumers can read throughput/batch/configs off any design point
     @property
     def throughput(self) -> float:
         return self.fps
@@ -47,6 +49,10 @@ class SingleBatchPoint:
     @property
     def batch(self) -> int:
         return 1
+
+    @property
+    def configs(self) -> tuple[tuple[int, int], ...]:
+        return (self.config,)
 
 
 @dataclass(frozen=True)
@@ -235,18 +241,17 @@ def explore(g: Graph, *, n_pu1x: int = 5, n_pu2x: int = 5,
                 candidates.append(getattr(res, dp))
             except LookupError:
                 pass
-        seen = {getattr(c, "configs", None) or (c.config,) for c in candidates}
+        seen = {c.configs for c in candidates}
         for s in sorted(mf, key=lambda s: -s.throughput):
             if s.configs not in seen:
                 candidates.append(s)
                 seen.add(s.configs)
         for cand in candidates[:validate]:
             sim = res.simulate(cand, rounds=validate_rounds)
-            analytic = getattr(cand, "throughput", None) or cand.fps
             res.validation.append(
                 ValidationRecord(
-                    configs=getattr(cand, "configs", None) or (cand.config,),
-                    analytic_fps=analytic,
+                    configs=cand.configs,
+                    analytic_fps=cand.throughput,
                     simulated_fps=sim.aggregate_fps(warmup=2),
                 )
             )

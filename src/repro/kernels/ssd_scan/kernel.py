@@ -46,7 +46,9 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_scr,
         jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
         >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
     )
-    L = jnp.where(causal, jnp.exp(diff), 0.0)
+    # mask before exp: exp(diff) overflows above the diagonal, and masking
+    # afterwards leaves 0 * inf = NaN in the VJP (same fix as models/ssm.py)
+    L = jnp.exp(jnp.where(causal, diff, -jnp.inf))
 
     CB = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)  # (l, l)

@@ -82,10 +82,14 @@ def ssd_chunked(xh, dt, A, B, C, chunk: int = 128):
     dA = dtc * A[None, None, None, :]  # (b,nc,l,H) negative increments
     cums = jnp.cumsum(dA, axis=2)  # within-chunk cumulative log-decay
 
-    # intra-chunk (diagonal) term: causal decay matrix L
+    # intra-chunk (diagonal) term: causal decay matrix L. Mask *before* the
+    # exp: above the diagonal Ldiff > 0 grows with |sum dt*A| and overflows
+    # to inf; where(causal, exp(Ldiff), 0) is fine in the forward pass but
+    # its backward computes 0 * inf = NaN. exp(-inf) = 0 keeps both passes
+    # finite.
     Ldiff = cums[:, :, :, None, :] - cums[:, :, None, :, :]  # (b,nc,l,l,H)
     causal = jnp.tril(jnp.ones((chunk, chunk), bool))
-    L = jnp.where(causal[None, None, :, :, None], jnp.exp(Ldiff), 0.0)
+    L = jnp.exp(jnp.where(causal[None, None, :, :, None], Ldiff, -jnp.inf))
     CB = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)  # (b,nc,l,l)
     y_diag = jnp.einsum("bclm,bclmh,bcmh,bcmhp->bclhp", CB, L, dtc, xc)
 

@@ -54,6 +54,48 @@ class TestFusion:
         for g in (zoo.resnet50(224), zoo.tiny_cnn(), zoo.linear_chain()):
             fuse(g).validate_topological()
 
+    def test_act_before_add_never_fuses_into_post_add_act(self):
+        """GEMM -> act -> Add must NOT collapse into a fused GEMM+Add with
+        the activation enable set: the post-processing block applies the
+        activation after the shortcut add, which would reorder act and add
+        (act(x+r) instead of act(x)+r). The act folds, the Add stays."""
+        from repro.compiler.graph import Graph
+        from repro.compiler.zoo import _add, _conv, _relu
+
+        g = Graph(name="preact")
+        x = g.add_tensor("input", (8, 8, 8))
+        g.input_tensors = [x.tid]
+        a = _conv(g, x, 8, 3, 1, 1, "c0")
+        b = _relu(g, _conv(g, a, 8, 3, 1, 1, "c1"), "r1")
+        s = _add(g, b, a, "add")
+        g.output_tensors = [s.tid]
+        g.validate_topological()
+
+        f = fuse(g)
+        assert sum(1 for n in f.nodes if n.op is OpType.ADD) == 1
+        assert not [n for n in f.nodes if n.op is OpType.FUSED_CONV_ADD]
+        (c1,) = [n for n in f.nodes if n.name.startswith("c1")]
+        assert c1.op is OpType.CONV and c1.relu
+
+    def test_geglu_archs_get_gated_ffn(self):
+        """geglu configs (gemma3) build the gate/mul FFN like swiglu (full
+        gemma3 dims exceed the 12-bit M field, so use the reduced config)."""
+        from repro.configs import get_config
+
+        cfg = get_config("gemma3-4b").reduced()
+        g = zoo.transformer_encoder(cfg, seq_len=64, depth=1)
+        gates = [n for n in g.nodes if n.name.endswith("ffn.gate")]
+        assert gates and all(n.m == cfg.d_ff for n in gates)
+        assert [n for n in g.nodes if n.op is OpType.MUL]
+
+    def test_oversized_shapes_rejected_at_graph_build(self):
+        """ISA field limits surface as clear errors at graph construction,
+        not as encode failures deep inside codegen."""
+        with pytest.raises(AssertionError):
+            zoo.transformer_encoder("dbrx-132b", seq_len=2048, depth=1)
+        with pytest.raises(AssertionError):
+            zoo.vit(1024)
+
     def test_resnet_gmacs_canonical(self):
         # canonical ResNet-50 ~3.9 GMACs at 224 (conv+fc; pools add a little)
         g = zoo.resnet50(224)
@@ -62,6 +104,106 @@ class TestFusion:
         # paper's input: 256x256
         g256 = zoo.resnet50(256)
         assert g256.total_macs() > g.total_macs() * 1.25
+
+
+# ------------------------------------------------------------ transformer --
+class TestTransformerFrontend:
+    """The transformer lowering flows through the same stack as the CNNs."""
+
+    def test_vit_shapes_and_macs(self):
+        """ViT-Base/16 at 224 is ~17.5 GMACs / ~86 M weight bytes."""
+        g = zoo.vit(224)
+        assert 16.5e9 <= g.total_macs() <= 18.5e9
+        assert 80e6 <= g.total_weight_bytes() <= 92e6
+
+    def test_encoder_parameterized_from_configs(self):
+        """zoo.transformer_encoder picks shapes up from repro.configs."""
+        from repro.configs import get_config
+
+        cfg = get_config("qwen3-0.6b")
+        g = zoo.transformer_encoder("qwen3-0.6b", seq_len=128, depth=2)
+        score = [n for n in g.nodes if n.op is OpType.ATTN_SCORE]
+        assert len(score) == 2
+        assert all(n.k == cfg.resolved_head_dim for n in score)
+        assert all(n.n == cfg.num_heads * 128 for n in score)
+        # GQA: k/v projections sized by num_kv_heads, q by num_heads
+        kproj = [n for n in g.nodes if n.name.endswith("wk")]
+        assert all(n.m == cfg.num_kv_heads * cfg.resolved_head_dim for n in kproj)
+
+    def test_fusion_folds_activations_and_residuals(self):
+        """proj->act folds into the GEMM; GEMM->residual-add chains fuse."""
+        f = fuse(zoo.transformer_encoder("qwen3-0.6b", seq_len=64, depth=2))
+        fused = [n for n in f.nodes if n.op is OpType.FUSED_PROJ_ADD]
+        # wo+add1 and ffn.down+add2 per block
+        assert len(fused) == 4
+        assert all(n.residual_input is not None for n in fused)
+        assert not [n for n in f.nodes if n.op in (OpType.ADD, OpType.GELU)]
+        # SwiGLU gate proj absorbed its SiLU (vector-activation enable)
+        gates = [n for n in f.nodes if n.name.endswith("ffn.gate")]
+        assert gates and all(n.relu and n.attrs.get("act") == "silu" for n in gates)
+
+    def test_fusion_preserves_transformer_macs(self):
+        g = zoo.vit(96, depth=2, d_model=192, heads=3, d_ff=768)
+        f = fuse(g)
+        assert f.total_macs() == g.total_macs()
+        assert f.total_weight_bytes() == g.total_weight_bytes()
+
+    def test_attention_gemms_are_weightless(self):
+        g = zoo.transformer_encoder("qwen3-0.6b", seq_len=64, depth=1)
+        for nd in g.nodes:
+            if nd.op in (OpType.ATTN_SCORE, OpType.ATTN_CONTEXT):
+                assert nd.weight_bytes == 0
+                assert nd.macs == nd.m * nd.n * nd.k
+                assert len(nd.inputs) == 2
+
+    def test_attention_operand_streams_through_weight_port(self):
+        """Score/context GEMMs emit a WEIGHTS_ADM for their second operand
+        and carry the URAM interlock in Compute.wchunks."""
+        from repro.core.isa import Compute, DataMove, Opcode
+
+        cm = compile_model(zoo.transformer_encoder("qwen3-0.6b", seq_len=64,
+                                                   depth=1), 1, 0, rounds=2)
+        (prog,) = cm.programs
+        wadms = [i for i in prog.cp if isinstance(i, DataMove)
+                 and i.op is Opcode.WEIGHTS_ADM and i.cur_ba != 0]
+        assert len(wadms) == 2  # one per attention GEMM (K and V streams)
+        n_attn = sum(1 for nd in cm.graph.nodes
+                     if nd.op in (OpType.ATTN_SCORE, OpType.ATTN_CONTEXT))
+        assert n_attn == 2
+        computes = [i for i in prog.cp if isinstance(i, Compute)]
+        assert sum(c.wchunks for c in computes) >= 2
+
+    def test_ffn_weights_exceed_uram_and_stream(self):
+        """qwen3 FFN matrices (~3 MB each) exceed the 2.25 MB URAM: the SMOF
+        scheduler must go dynamic and stay feasible."""
+        f = fuse(zoo.transformer_encoder("qwen3-0.6b", seq_len=64, depth=2))
+        ws = schedule_weights(f, [nd.nid for nd in f.nodes], PU2X)
+        assert not ws.fully_static()
+        assert ws.feasible()
+
+    def test_encoder_compile_simulate_consistency(self):
+        g = zoo.transformer_encoder("qwen3-0.6b", seq_len=256, depth=2)
+        cm = compile_model(g, 2, 2, rounds=4)
+        for prog in cm.programs:
+            prog.validate()
+        last = max(s.index for s in cm.part.stages if s.nids)
+        res = simulate(cm.programs, first_pid=cm.pid_map[0],
+                       last_pid=cm.pid_map[last])
+        assert not res.deadlocked
+        assert res.rounds == 4
+        assert res.throughput_fps(warmup=2) == pytest.approx(cm.predicted_fps, rel=0.12)
+
+    def test_vit_partitions_balance_heads_and_blocks(self):
+        """The DP cut lands mid-block when that balances the pipeline; the
+        REQ/ACK handshakes across the cut keep the simulation live."""
+        g = zoo.vit(96, depth=4, d_model=192, heads=3, d_ff=768)
+        cm = compile_model(g, 2, 2, rounds=3)
+        used = [s for s in cm.part.stages if s.nids]
+        assert len(used) == 4
+        res = simulate(cm.programs, first_pid=cm.pid_map[used[0].index],
+                       last_pid=cm.pid_map[used[-1].index])
+        assert not res.deadlocked
+        assert cm.pbe() > 0.7
 
 
 # --------------------------------------------------------------- partition --

@@ -1,0 +1,215 @@
+"""Property-based encoding tests (hypothesis) with example-based fallback.
+
+Covers what tests/test_isa.py spot-checks, exhaustively:
+
+  * Instruction.encode/decode round-trips over *all* opcode families, with
+    randomized in-range field values;
+  * Program / PUProgram encode -> decode round-trips (BRAM image fidelity);
+  * Program.validate() invariants for every graph in the zoo, compiled
+    through the full framework (CNNs and the transformer frontend).
+
+Without hypothesis the property tests skip and the example grid below keeps
+the same checks alive on fixed vectors.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.compiler import compile_model, zoo
+from repro.core.isa import (
+    BEAT,
+    AddrCyc,
+    Compute,
+    Config,
+    DataMove,
+    Group,
+    Instruction,
+    Opcode,
+    ProgCtrl,
+    Sync,
+)
+from repro.core.program import Program, PUProgram
+
+CONFIG_OPS = [Opcode.IM2COL_PRM, Opcode.STRIDE_PRM, Opcode.URAM_PRM,
+              Opcode.RES_ADD_STRIDE_PRM]
+DATAMOVE_OPS = [Opcode.LINEAR_ADM, Opcode.IM2COL_ADM, Opcode.STRIDE_ADM,
+                Opcode.WEIGHTS_ADM, Opcode.RES_ADD_ADM, Opcode.RES_ADD_STRIDE_ADM]
+SYNC_OPS = [Opcode.SEND_REQ, Opcode.SEND_ACK, Opcode.WAIT_REQ, Opcode.WAIT_ACK]
+
+
+def _bits(n):
+    return (1 << n) - 1
+
+
+# ------------------------------------------------- example fallback grid --
+def _example_instructions():
+    """Deterministic corner-value grid covering every opcode family: all-zero,
+    all-max, and mixed field values."""
+    out = [
+        ProgCtrl(nr=0, icu_ba=0),
+        ProgCtrl(nr=_bits(24), icu_ba=_bits(12), prg_end=True),
+        AddrCyc(ba=0, aoffs=0, nc=0, ic=0),
+        AddrCyc(ba=_bits(26) * BEAT, aoffs=_bits(17) * BEAT, nc=_bits(7), ic=_bits(7)),
+        Compute(m=0, n=0, k=0),
+        Compute(m=_bits(12), n=_bits(16), k=_bits(14), relu=True, add_enable=True,
+                scale_shift=_bits(5), rounds=1, wchunks=_bits(7), prg_end=True),
+    ]
+    for op in CONFIG_OPS:
+        out.append(Config(op=op, param0=_bits(20), param1=_bits(14),
+                          param2=_bits(12), param3=_bits(11)))
+        out.append(Config(op=op, param0=1, param1=2, param2=3, param3=4))
+    for op in DATAMOVE_OPS:
+        out.append(DataMove(op=op, cur_ba=_bits(26) * BEAT,
+                            length=_bits(22) * BEAT, channel=_bits(5)))
+        out.append(DataMove(op=op, cur_ba=BEAT, length=BEAT, channel=1))
+    for op in SYNC_OPS:
+        out.append(Sync(op=op, pid=_bits(6), bid=_bits(12), base_bid=_bits(12),
+                        nc=_bits(12), ic=_bits(12), prg_end=True))
+        out.append(Sync(op=op, pid=0, bid=0, base_bid=0, nc=0, ic=0))
+    return out
+
+
+@pytest.mark.parametrize(
+    "inst", _example_instructions(),
+    ids=lambda i: f"{type(i).__name__}:{getattr(i, 'op', i.opcode).name}")
+def test_roundtrip_examples(inst):
+    word = inst.encode()
+    assert 0 <= word < (1 << 64)
+    assert Instruction.decode(word) == inst
+
+
+# ----------------------------------------------------- hypothesis domain --
+if HAVE_HYPOTHESIS:
+    beats = lambda n: st.integers(0, _bits(n)).map(lambda b: b * BEAT)  # noqa: E731
+
+    progctrl_s = st.builds(ProgCtrl, nr=st.integers(0, _bits(24)),
+                           icu_ba=st.integers(0, _bits(12)),
+                           prg_end=st.booleans())
+    config_s = st.builds(Config, op=st.sampled_from(CONFIG_OPS),
+                         param0=st.integers(0, _bits(20)),
+                         param1=st.integers(0, _bits(14)),
+                         param2=st.integers(0, _bits(12)),
+                         param3=st.integers(0, _bits(11)),
+                         prg_end=st.booleans())
+    datamove_s = st.builds(DataMove, op=st.sampled_from(DATAMOVE_OPS),
+                           cur_ba=beats(26), length=beats(22),
+                           channel=st.integers(0, _bits(5)),
+                           prg_end=st.booleans())
+    addrcyc_s = st.builds(AddrCyc, ba=beats(26), aoffs=beats(17),
+                          nc=st.integers(0, _bits(7)),
+                          ic=st.integers(0, _bits(7)),
+                          prg_end=st.booleans())
+    sync_s = st.builds(Sync, op=st.sampled_from(SYNC_OPS),
+                       pid=st.integers(0, _bits(6)),
+                       bid=st.integers(0, _bits(12)),
+                       base_bid=st.integers(0, _bits(12)),
+                       nc=st.integers(0, _bits(12)),
+                       ic=st.integers(0, _bits(12)),
+                       prg_end=st.booleans())
+    compute_s = st.builds(Compute, m=st.integers(0, _bits(12)),
+                          n=st.integers(0, _bits(16)),
+                          k=st.integers(0, _bits(14)),
+                          relu=st.booleans(), add_enable=st.booleans(),
+                          scale_shift=st.integers(0, _bits(5)),
+                          rounds=st.integers(0, 1),
+                          wchunks=st.integers(0, _bits(7)),
+                          prg_end=st.booleans())
+    instruction_s = st.one_of(progctrl_s, config_s, datamove_s, addrcyc_s,
+                              sync_s, compute_s)
+
+    @given(instruction_s)
+    def test_roundtrip_property(inst):
+        word = inst.encode()
+        assert 0 <= word < (1 << 64)
+        assert Instruction.decode(word) == inst
+
+    @given(sync_s)
+    def test_sync_bid_cycling_stays_in_range(inst):
+        """Table I(b): after any number of steps, BID stays within
+        [BASE_BID, BASE_BID + NC] once the first reset has happened."""
+        inst.ic = inst.nc  # offline-load convention
+        if inst.nc:
+            inst.bid = inst.base_bid
+        start_bid = inst.bid
+        for _ in range(3 * (inst.nc + 1)):
+            inst.step()
+            if inst.nc == 0:
+                assert inst.bid == start_bid  # bypass mode never moves
+            else:
+                assert inst.base_bid <= inst.bid <= inst.base_bid + inst.nc
+                assert 0 <= inst.ic <= inst.nc
+
+    @given(addrcyc_s, beats(26))
+    def test_addrcyc_returns_region_addresses(inst, pred_ba):
+        """A full NC+1 cycle starting from reset visits exactly the region
+        base addresses BA, BA+AOFFS, ..., BA+NC*AOFFS."""
+        inst.ic = 0  # force reset on the first step
+        cur = pred_ba
+        seen = []
+        for _ in range(inst.nc + 1):
+            cur = inst.step(cur)
+            seen.append(cur)
+        assert seen == [inst.ba + i * inst.aoffs for i in range(inst.nc + 1)]
+
+    @settings(deadline=None)
+    @given(st.lists(compute_s, min_size=0, max_size=8))
+    def test_cp_program_image_roundtrip(body):
+        """Any assembled CP program survives the BRAM image round-trip."""
+        for i in body:
+            i.prg_end = False
+        prog = Program.assemble(Group.CP, body, rounds=3, name="p")
+        prog.validate()
+        back = Program.decode(Group.CP, prog.encode(), name="p")
+        assert back.instructions == prog.instructions
+
+
+# ------------------------------------------- zoo-wide program invariants --
+def _zoo_graphs():
+    """Every family of graph the zoo can build, at test-friendly sizes."""
+    return [
+        zoo.tiny_cnn(),
+        zoo.linear_chain(4),
+        zoo.resnet50(64),
+        zoo.vit(64, depth=2, d_model=192, heads=3, d_ff=384),
+        zoo.transformer_encoder("qwen3-0.6b", seq_len=64, depth=2),
+    ]
+
+
+@pytest.mark.parametrize("graph", _zoo_graphs(), ids=lambda g: g.name)
+@pytest.mark.parametrize("a,b", [(1, 0), (2, 2)])
+def test_zoo_programs_validate_and_roundtrip(graph, a, b):
+    """Compiled programs for every zoo graph: PUProgram.validate() passes,
+    and the encoded BRAM images decode back to the identical programs."""
+    cm = compile_model(graph, a, b, rounds=3)
+    assert cm.programs
+    for pu in cm.programs:
+        pu.validate()
+        img = pu.encode()
+        for grp, prog in (("LD", pu.ld), ("CP", pu.cp), ("ST", pu.st)):
+            words = img[grp]
+            assert all(0 <= w < (1 << 64) for w in words)
+            back = Program.decode(prog.group, words, name=prog.name)
+            assert back.instructions == prog.instructions
+            back.validate()
+
+
+@pytest.mark.parametrize("graph", _zoo_graphs(), ids=lambda g: g.name)
+def test_zoo_program_structural_invariants(graph):
+    """Structural invariants the ICU decode FSM relies on: terminal ProgCtrl
+    with PRG_END, in-range loop base, one Compute per compute node."""
+    from repro.core.isa import Compute as ComputeInst
+
+    cm = compile_model(graph, 1, 1, rounds=2)
+    total_gemms = 0
+    for pu in cm.programs:
+        for prog in (pu.ld, pu.cp, pu.st):
+            assert prog.instructions[-1].prg_end
+            assert isinstance(prog.instructions[-1], ProgCtrl)
+            assert 0 <= prog.progctrl.icu_ba < len(prog)
+        total_gemms += sum(1 for i in pu.cp if isinstance(i, ComputeInst))
+    assert total_gemms == len(cm.graph.nodes)

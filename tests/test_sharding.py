@@ -13,14 +13,13 @@ from repro.configs import all_configs, get_config
 
 class TestPolicyRules:
     def _policy(self, arch, multi_pod=False):
-        # policy construction only needs mesh *shape* metadata; build an
-        # abstract mesh over the single CPU device via AbstractMesh
-        from jax.sharding import AbstractMesh
-        from repro.runtime.sharding import make_policy
+        # policy construction only needs mesh *shape* metadata; build a
+        # device-free mesh via the version-robust helper
+        from repro.runtime.sharding import make_abstract_mesh, make_policy
 
         shape = (2, 16, 16) if multi_pod else (16, 16)
         axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-        mesh = AbstractMesh(shape, axes)
+        mesh = make_abstract_mesh(shape, axes)
         return make_policy(get_config(arch), mesh)
 
     def test_attn_mode_by_divisibility(self):
