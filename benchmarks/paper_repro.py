@@ -11,6 +11,11 @@
   transformer_point    -- beyond the paper: the transformer frontend
                           (ViT-Base + qwen3 encoder stack) through the same
                           DSE, with compute efficiency and one simulated run
+  multi_tenant_point   -- beyond the paper: FPGA-virtualization-style
+                          multi-tenancy — ResNet-50 + ViT co-explored, the
+                          max-min-fair split deployed, and a mid-session
+                          switch from single-tenant DP-A to the two-tenant
+                          deployment with no reconfiguration
 """
 from __future__ import annotations
 
@@ -19,8 +24,8 @@ import time
 from repro.compiler import zoo
 from repro.core import Group, MultiPUSimulator, latency_matrix, make_u50_system
 from repro.core.demo import GemmShape, build_two_pu_pipeline
-from repro.deploy import System
-from repro.dse import explore
+from repro.deploy import System, compile_deployment
+from repro.dse import explore, explore_multi
 
 GOPS_224EQ_PER_FRAME = 7.72  # canonical ResNet-50 GOPs (224x224, Table III)
 SYSTEM_PEAK_TOPS = 4.608
@@ -233,6 +238,47 @@ def transformer_point() -> list[str]:
     return rows
 
 
+def multi_tenant_point() -> list[str]:
+    """Different models for different tenants on one fixed machine: ResNet-50
+    and ViT-Base/16 co-explored (`explore_multi`), the max-min-fair joint
+    placement compiled as a two-tenant deployment on disjoint PU/HBM slices,
+    and a running single-tenant DP-A session hot-swapped to it — new
+    instruction programs only, no reconfiguration."""
+    g_res, g_vit = zoo.resnet50(256), zoo.vit(224)
+    res = explore_multi([g_res, g_vit])
+    pick = res.balanced
+    rows = [f"mt.joint_space,,points={len(res.points)};pareto={len(res.frontier)}"]
+    for i, g in enumerate((g_res, g_vit)):
+        a, b = pick.configs[i]
+        rows.append(
+            f"mt.tenant_{g.name},,config={a}x1_{b}x2;fps={pick.fps[i]:.1f};"
+            f"solo_frac={pick.fps[i] / res.best_solo_fps(i):.3f};"
+            f"latency_ms={pick.latency[i]*1e3:.2f}"
+        )
+
+    system = System()
+    best_solo = max(res.singles[0], key=lambda p: p.fps)
+    sim_solo = system.load(
+        compile_deployment(g_res, best_solo.config, rounds=5)).run()
+    dep = res.deploy(pick, rounds=4)
+    t0 = time.perf_counter()
+    sim = system.switch(dep).run()  # same PU array, two tenants now
+    wall_us = (time.perf_counter() - t0) * 1e6
+    errs = [
+        abs(m.throughput_fps(warmup=2) - f) / f
+        for m, f in zip(sim.members, pick.fps)
+    ]
+    tenant_rates = ";".join(
+        f"{label}={fps:.1f}" for label, fps in sim.fps_by_workload(warmup=2).items())
+    rows.append(
+        f"mt.switch_single_to_two_tenant,{wall_us:.0f},"
+        f"fps_before={sim_solo.aggregate_fps(warmup=2):.1f};{tenant_rates};"
+        f"max_pred_err={max(errs):.3f};deadlock={int(sim.deadlocked)};"
+        f"loads={len(system.history)};reconfigured=0"
+    )
+    return rows
+
+
 def run() -> list[str]:
     out = []
     g = zoo.resnet50(256)
@@ -244,4 +290,5 @@ def run() -> list[str]:
     out += table3_comparison(dse)
     out += simulated_design_points(dse)
     out += transformer_point()
+    out += multi_tenant_point()
     return out

@@ -19,7 +19,7 @@ from .fusion import fuse
 from .graph import Graph
 from .memory import MemoryPlan, assign_channels, buffer_requirements
 from .partition import Partition, partition
-from .profiler import profile_graph
+from .profiler import DECODE_CYCLES, profile_graph
 from .weights import WeightSchedule, schedule_weights
 
 
@@ -119,16 +119,22 @@ def compile_model(
     part = partition(fused, profiles, n_pu1x, n_pu2x)
 
     # Weight-transfer schedules + refined stage times (partitioning and
-    # weight scheduling are treated separately, as in the paper).
+    # weight scheduling are treated separately, as in the paper). The stall
+    # term is node-granular (matching the codegen's one-node-lookahead chunk
+    # issue, including attention weight-port streams); each dynamic chunk
+    # also costs two CP instruction decodes (URAM_PRM + WEIGHTS_ADM issue).
     spec_of_kind = {p.kind: p for p in pus}
     wscheds: dict[int, WeightSchedule] = {}
     stage_times: dict[int, float] = {}
     for s in part.stages:
         if not s.nids:
             continue
-        ws = schedule_weights(fused, list(s.nids), spec_of_kind[s.pu_kind])
+        spec = spec_of_kind[s.pu_kind]
+        ws = schedule_weights(fused, list(s.nids), spec)
         wscheds[s.index] = ws
-        stage_times[s.index] = s.time + ws.total_stall()
+        n_dyn = sum(t.dynamic_chunks for t in ws.tiles)
+        chunk_decode = 2 * n_dyn * DECODE_CYCLES / spec.sys_clk_hz
+        stage_times[s.index] = s.time + ws.total_stall() + chunk_decode
 
     plans = buffer_requirements(fused, part, n_io=n_io)
     mem = assign_channels(fused, part, plans, profiles, channel_pool=channel_pool)

@@ -3,9 +3,27 @@
 Profiles each node under *conflict-free* conditions — weights preloaded in
 URAMs, dedicated HBM channels — measuring complete node processing: activation
 fetch from HBM, SA computation, output storage. With tile-grained streaming
-the PU overlaps these, so the steady-state node time is
+the PU overlaps these, so the steady-state node time is the slowest of the
+three decoupled instruction groups, each charged its own per-instruction
+decode overhead (1 sys_clk cycle per instruction, matching the ICU decoder):
 
-    t_node = max(t_compute, t_load, t_store, t_residual) + decode overhead
+    t_node = max(t_compute + cp_decode,
+                 t_load    + ld_decode,
+                 t_store   + st_decode,
+                 t_residual)
+
+Transfers are accounted per ADM DataMove — each transfer pays the
+latency-dominated ~40-cycle floor individually (the profiler used to lump
+all input bytes into one transfer, which under-counted tiny nodes whose
+per-stream floors dominate). The LD group only ever moves the *primary*
+input; residual shortcuts and second operands stream through the CP-issued
+async ADM engines (``t_residual``), and the second operand of an attention
+GEMM goes through the SA weight port, whose node-granular stall accounting
+lives in ``repro.compiler.weights``.
+
+Instruction counts mirror ``repro.compiler.codegen`` (DataMove + AddrCyc +
+optional PRM + REQ/ACK handshakes per stream); dynamic weight-chunk issue
+decodes are added by the compile driver once the weight schedule is known.
 
 Profiles are computed per PU *type* (PU1x / PU2x); weight-streaming stalls are
 handled separately by ``repro.compiler.weights`` (Sec. IV-B).
@@ -14,10 +32,13 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+from ..core.icu import DECODE_CYCLES  # per-instruction issue overhead (sys_clk)
 from ..core.pu import PUSpec
 from .graph import Graph, Node, OpType
 
-DECODE_OVERHEAD_S = 8 / 300e6  # a few sys_clk cycles of instruction issue
+_ATTN_OPS = (OpType.ATTN_SCORE, OpType.ATTN_CONTEXT)
+_IM2COL_OPS = (OpType.CONV, OpType.FUSED_CONV_ADD, OpType.PROJ,
+               OpType.FUSED_PROJ_ADD)
 
 
 @dataclass(frozen=True)
@@ -27,24 +48,70 @@ class NodeProfile:
     t_load: float
     t_store: float
     t_residual: float
+    # per-group instruction decode time (seconds) — see module docstring
+    t_ld_decode: float = 0.0
+    t_cp_decode: float = 0.0
+    t_st_decode: float = 0.0
 
     @property
     def t_node(self) -> float:
-        return max(self.t_compute, self.t_load, self.t_store, self.t_residual) + DECODE_OVERHEAD_S
+        return max(
+            self.t_compute + self.t_cp_decode,
+            self.t_load + self.t_ld_decode,
+            self.t_store + self.t_st_decode,
+            self.t_residual,
+        )
+
+
+def instruction_counts(g: Graph, nd: Node) -> tuple[int, int, int]:
+    """Per-round (LD, CP, ST) instruction counts this node contributes,
+    mirroring the emission rules of ``repro.compiler.codegen``."""
+    ld = 0
+    if nd.inputs:
+        ld += 2  # DataMove + AddrCyc for the primary input
+        if nd.kernel != (1, 1) and nd.op in _IM2COL_OPS:
+            ld += 1  # IM2COL_PRM
+        elif nd.stride != (1, 1):
+            ld += 1  # STRIDE_PRM
+        if nd.inputs[0] not in g.input_tensors:
+            ld += 2  # WAIT_REQ + SEND_ACK
+        side = list(nd.inputs[1:])
+        if nd.residual_input is not None:
+            side.append(nd.residual_input)
+        ld += 2 * sum(1 for t in side if t not in g.input_tensors)
+    cp = 1  # Compute
+    if nd.op in _ATTN_OPS:
+        cp += 3  # URAM_PRM + WEIGHTS_ADM + AddrCyc (weight-port stream)
+    elif nd.residual_input is not None or len(nd.inputs) > 1:
+        cp += 3  # RES_ADD PRM + ADM + AddrCyc
+    st = 2  # DataMove + AddrCyc
+    if nd.outputs and nd.outputs[0] not in g.output_tensors:
+        st += 2 * len(g.consumers_of(nd.outputs[0]))  # WAIT_ACK + SEND_REQ each
+    return ld, cp, st
 
 
 def profile_node(g: Graph, nd: Node, pu: PUSpec) -> NodeProfile:
     t_cp = pu.gemm_seconds(nd.m, nd.n, nd.k) if (nd.m and nd.n and nd.k) else 0.0
-    in_bytes = sum(g.tensors[t].nbytes_padded for t in nd.inputs)
+
+    primary = nd.inputs[0] if nd.inputs else None
+    t_ld = pu.adm_seconds(g.tensors[primary].nbytes_padded) if primary is not None else 0.0
     out_bytes = sum(g.tensors[t].nbytes_padded for t in nd.outputs)
-    t_ld = pu.adm_seconds(in_bytes) if in_bytes else 0.0
     t_st = pu.adm_seconds(out_bytes) if out_bytes else 0.0
-    t_res = (
-        pu.adm_seconds(g.tensors[nd.residual_input].nbytes_padded)
-        if nd.residual_input is not None
-        else 0.0
-    )
-    return NodeProfile(nd.nid, t_cp, t_ld, t_st, t_res)
+
+    # CP-issued async side streams, one ADM (with its own floor) each:
+    # the residual shortcut plus — for non-attention two-input nodes — the
+    # second operand. Attention second operands go through the SA weight
+    # port instead (node-granular stall model in repro.compiler.weights).
+    side = [nd.residual_input] if nd.residual_input is not None else []
+    if nd.op not in _ATTN_OPS and len(nd.inputs) > 1:
+        side.append(nd.inputs[1])
+    t_res = sum(pu.adm_seconds(g.tensors[t].nbytes_padded) for t in side)
+
+    ld_i, cp_i, st_i = instruction_counts(g, nd)
+    dec = DECODE_CYCLES / pu.sys_clk_hz
+    return NodeProfile(nd.nid, t_cp, t_ld, t_st, t_res,
+                       t_ld_decode=ld_i * dec, t_cp_decode=cp_i * dec,
+                       t_st_decode=st_i * dec)
 
 
 def profile_graph(g: Graph, pu_types: dict[str, PUSpec]) -> dict[str, dict[int, NodeProfile]]:

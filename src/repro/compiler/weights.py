@@ -6,7 +6,7 @@ dimension) into fixed-size chunks; some chunks are allocated *offline*
 (resident in URAM), the rest stream *dynamically* from HBM during execution,
 scheduled so that chunks for tile t+1 load during tile t's execution.
 
-Greedy deficit-based allocation: iteratively pin chunks of the tile with the
+Greedy deficit-based allocation: iteratively pin chunks of the node with the
 highest *deficit* — the stall its dynamic loads would cause after overlap
 hiding — until the capacity constraint binds:
 
@@ -14,6 +14,16 @@ hiding — until the capacity constraint binds:
 
 (dynamic chunks are evicted after their tile completes, so at most two
 adjacent tiles' dynamic footprints coexist).
+
+Stall accounting is *node*-granular, matching the instruction generator: all
+of a node's dynamic chunks are issued with one-node lookahead and the node's
+single Compute holds the URAM interlock, so the overlap window for node j's
+chunk loads is node j-1's SA execution (cyclically across rounds for the
+first node). Attention score/context GEMMs additionally stream their second
+operand through the SA weight port under the same interlock; that fixed,
+non-pinnable load joins the node's chunk loads in the stall model. A
+schedule built without node context (``node_order`` empty) falls back to the
+older per-tile overlap estimate.
 """
 from __future__ import annotations
 
@@ -21,9 +31,11 @@ import math
 from dataclasses import dataclass, field
 
 from ..core.pu import PUSpec, URAM_BYTES
-from .graph import Graph, Node
+from .graph import Graph, Node, OpType
 
 CHUNK_BYTES = URAM_BYTES  # one URAM per chunk
+
+_ATTN_OPS = (OpType.ATTN_SCORE, OpType.ATTN_CONTEXT)
 
 
 @dataclass
@@ -49,17 +61,43 @@ class WeightSchedule:
     pu_kind: str
     capacity_bytes: int
     t_chunk_load: float  # HBM->URAM time per chunk on the weight channel
+    # node-granular stall context (the segment's full node order, each
+    # node's SA execution time, and fixed weight-port streams — attention
+    # second operands); empty for schedules built without node context.
+    node_order: list[int] = field(default_factory=list)
+    node_exec: dict[int, float] = field(default_factory=dict)
+    node_stream: dict[int, float] = field(default_factory=dict)
 
     # -- derived -------------------------------------------------------------
     def stall_of(self, idx: int) -> float:
-        """Execution stall before tile idx: its dynamic chunks load during
-        tile idx-1's execution (cyclically across rounds for idx==0)."""
+        """Per-tile overlap estimate (legacy; used when no node context is
+        attached): tile idx's dynamic chunks load during tile idx-1's
+        execution (cyclically across rounds for idx==0)."""
         t = self.tiles[idx]
         load = t.dynamic_chunks * self.t_chunk_load
         prev_exec = self.tiles[idx - 1].t_exec if self.tiles else 0.0
         return max(0.0, load - prev_exec)
 
+    def node_stalls(self) -> dict[int, float]:
+        """Execution stall before each node's GEMM, per the codegen issue
+        order: node j's dynamic chunks (and weight-port streams) load during
+        node j-1's SA execution; whatever does not fit stalls node j."""
+        dyn = self.node_dynamic_chunks()
+        stalls: dict[int, float] = {}
+        order = self.node_order
+        for j, nid in enumerate(order):
+            load = dyn.get(nid, 0) * self.t_chunk_load + self.node_stream.get(nid, 0.0)
+            if load <= 0.0:
+                continue
+            window = self.node_exec.get(order[j - 1], 0.0)  # cyclic for j==0
+            s = load - window
+            if s > 0.0:
+                stalls[nid] = s
+        return stalls
+
     def total_stall(self) -> float:
+        if self.node_order:
+            return sum(self.node_stalls().values())
         return sum(self.stall_of(i) for i in range(len(self.tiles)))
 
     def static_bytes(self) -> int:
@@ -116,11 +154,24 @@ def build_tiles(g: Graph, nids: list[int], pu: PUSpec) -> list[Tile]:
 def schedule_weights(g: Graph, nids: list[int], pu: PUSpec) -> WeightSchedule:
     """Greedy deficit-based offline allocation under the URAM capacity."""
     tiles = build_tiles(g, nids, pu)
+    node_exec: dict[int, float] = {}
+    node_stream: dict[int, float] = {}
+    for nid in nids:
+        nd = g.node_by_id(nid)
+        node_exec[nid] = (
+            pu.gemm_seconds(nd.m, nd.n, nd.k) if (nd.m and nd.n and nd.k) else 0.0
+        )
+        if nd.op in _ATTN_OPS:
+            node_stream[nid] = pu.adm_seconds(
+                g.tensors[nd.inputs[1]].nbytes_padded)
     sched = WeightSchedule(
         tiles=tiles,
         pu_kind=pu.kind,
         capacity_bytes=pu.uram_capacity_bytes,
         t_chunk_load=pu.adm_seconds(CHUNK_BYTES),
+        node_order=list(nids),
+        node_exec=node_exec,
+        node_stream=node_stream,
     )
     if not tiles:
         return sched
@@ -132,35 +183,33 @@ def schedule_weights(g: Graph, nids: list[int], pu: PUSpec) -> WeightSchedule:
             t.static_chunks = t.n_chunks
         return sched
 
-    # Iteratively pin one chunk of the most deficit-prone tile.
-    while True:
-        # deficit per tile: stall caused by its remaining dynamic chunks.
-        worst_i, worst_stall = -1, 0.0
-        for i in range(len(tiles)):
-            if tiles[i].dynamic_chunks == 0:
+    tiles_of_node: dict[int, list[Tile]] = {}
+    for t in tiles:
+        tiles_of_node.setdefault(t.nid, []).append(t)
+
+    def pin_one(nid: int) -> bool:
+        """Pin one chunk of ``nid`` (from its most dynamic tile) if the
+        capacity constraint allows it."""
+        for t in sorted(tiles_of_node[nid], key=lambda t: -t.dynamic_chunks):
+            if t.dynamic_chunks == 0:
                 continue
-            s = sched.stall_of(i)
-            if s > worst_stall:
-                worst_i, worst_stall = i, s
-        if worst_i < 0:
-            break  # no stalls remain — schedule fully hidden
-        tiles[worst_i].static_chunks += 1
-        if not sched.feasible():
-            tiles[worst_i].static_chunks -= 1  # revert; capacity bound hit
-            # try the next most deficit-prone tiles before giving up
-            candidates = sorted(
-                (i for i in range(len(tiles)) if tiles[i].dynamic_chunks > 0),
-                key=sched.stall_of,
-                reverse=True,
-            )
-            progressed = False
-            for i in candidates:
-                tiles[i].static_chunks += 1
-                if sched.feasible():
-                    progressed = True
-                    break
-                tiles[i].static_chunks -= 1
-            if not progressed:
-                break
+            t.static_chunks += 1
+            if sched.feasible():
+                return True
+            t.static_chunks -= 1  # revert; capacity bound hit
+        return False
+
+    # Iteratively pin one chunk of the most deficit-prone node (the node
+    # whose remaining dynamic loads stall its GEMM the longest).
+    while True:
+        stalls = sched.node_stalls()
+        dyn = sched.node_dynamic_chunks()
+        candidates = sorted(
+            (nid for nid in stalls if dyn.get(nid, 0) > 0),
+            key=lambda nid: stalls[nid],
+            reverse=True,
+        )
+        if not any(pin_one(nid) for nid in candidates):
+            break  # no pinnable stalls remain, or capacity bound everywhere
     assert sched.feasible()
     return sched

@@ -11,6 +11,9 @@ subsets (batch-level / hybrid parallelism, Sec. V-A). ``run`` therefore takes
 a list of :class:`PipelineMember` descriptors and the :class:`SimResult`
 carries per-member round accounting plus system aggregates; the single
 ``first_pid``/``last_pid`` form remains as the one-member special case.
+Members carry the label of the workload (model) they run, so mixed-model
+(multi-tenant) runs stay attributable — ``SimResult.fps_by_workload`` splits
+the aggregate rate per tenant.
 """
 from __future__ import annotations
 
@@ -27,11 +30,16 @@ from .pu import N_HBM_CHANNELS, PUSpec, SYS_CLK_HZ, make_u50_system, system_peak
 
 @dataclass(frozen=True)
 class PipelineMember:
-    """Entry/exit PUs of one member pipeline, for latency accounting."""
+    """Entry/exit PUs of one member pipeline, for latency accounting.
+
+    ``workload`` names the model this member runs (empty for legacy
+    single-model deployments) so per-member results of a mixed-model run
+    remain attributable to their tenant."""
 
     first_pid: int
     last_pid: int
     label: str = ""
+    workload: str = ""
 
 
 def _steady_fps(round_ends: list[float], warmup: int, sys_clk_hz: float,
@@ -71,6 +79,11 @@ class MemberSimResult:
     @property
     def label(self) -> str:
         return self.member.label
+
+    @property
+    def workload(self) -> str:
+        """Label of the workload (model) this member ran."""
+        return self.member.workload
 
     def throughput_fps(self, warmup: int = 1) -> float:
         return _steady_fps(self.round_end_cycles, warmup, self.sys_clk_hz,
@@ -112,6 +125,17 @@ class SimResult:
         if not self.members:
             return self.throughput_fps(warmup)
         return sum(m.throughput_fps(warmup) for m in self.members)
+
+    def fps_by_workload(self, warmup: int = 1) -> dict[str, float]:
+        """Aggregate throughput split per workload label — the per-tenant
+        rates of a mixed-model (multi-tenant) deployment. Members without a
+        workload label fall under ``""``."""
+        out: dict[str, float] = {}
+        for m in self.members:
+            out[m.workload] = out.get(m.workload, 0.0) + m.throughput_fps(warmup)
+        if not out:
+            out[""] = self.throughput_fps(warmup)
+        return out
 
     def latency_seconds(self, skip_warmup: int = 1) -> float:
         return _mean_latency(self.round_latencies_cycles, skip_warmup, self.sys_clk_hz)

@@ -1,18 +1,23 @@
-# First-class deployments (paper Sec. V): Strategy (what to run),
-# compile_deployment (how it lands on disjoint PU/channel slices),
-# Deployment (executable programs + analytic model), System (one fixed
-# machine, runtime strategy switching without reconfiguration).
+# First-class deployments (paper Sec. V): Workload (one tenant's model),
+# Strategy (what to run — members are (workload, a, b) pipelines),
+# compile_deployment (how it lands on disjoint PU/channel slices, one graph
+# per member), Deployment (executable programs + analytic model), System
+# (one fixed machine, runtime strategy switching without reconfiguration —
+# including single-tenant <-> multi-tenant swaps).
 from .deployment import DeployedMember, Deployment, compile_deployment
-from .resources import MemberResources, partition_resources
-from .strategy import Strategy
+from .resources import MemberResources, check_fits, partition_resources
+from .strategy import Member, Strategy, Workload
 from .system import System
 
 __all__ = [
     "DeployedMember",
     "Deployment",
+    "Member",
     "MemberResources",
     "Strategy",
     "System",
+    "Workload",
+    "check_fits",
     "compile_deployment",
     "partition_resources",
 ]

@@ -7,9 +7,18 @@ discrete-event simulator (or the hardware), per-member placement, and the
 analytic aggregate performance model (throughput = sum of members, system
 latency = slowest member, CE over the assigned PUs) that the DSE caches.
 
+Every member carries its *own* :class:`~repro.deploy.Workload` and is
+compiled against its own graph — so one deployment can mix models
+(FPGA-virtualization-style multi-tenancy: a ResNet member and a ViT member
+on disjoint slices). The ``graph`` argument is the backward-compatible
+broadcast: it binds every workload-less member, and may be ``None`` when the
+strategy already assigns a workload to each member (e.g. built by
+``Strategy.tenants`` or ``explore_multi``).
+
 This is the uniform executable form of every DSE design point: DP-A is a
-one-member deployment, DP-B/DP-C are multi-member ones — all produced by the
-same call and all loadable into :class:`repro.deploy.System`.
+one-member deployment, DP-B/DP-C are multi-member ones, a multi-tenant
+split is a per-member-workload one — all produced by the same call and all
+loadable into :class:`repro.deploy.System`.
 """
 from __future__ import annotations
 
@@ -22,7 +31,7 @@ from ..core.program import PUProgram
 from ..core.pu import N_HBM_CHANNELS, PUSpec, make_u50_system
 from ..core.simulator import PipelineMember
 from .resources import MemberResources, partition_resources
-from .strategy import Strategy
+from .strategy import Strategy, Workload
 
 
 @dataclass
@@ -31,8 +40,13 @@ class DeployedMember:
 
     index: int
     config: tuple[int, int]
+    workload: Workload
     compiled: CompiledModel
     resources: MemberResources
+
+    @property
+    def graph(self) -> Graph:
+        return self.workload.graph
 
     @property
     def pids(self) -> tuple[int, ...]:
@@ -66,6 +80,7 @@ class DeployedMember:
             first_pid=self.first_pid,
             last_pid=self.last_pid,
             label=f"m{self.index}({a},{b})",
+            workload=self.workload.label,
         )
 
 
@@ -74,7 +89,6 @@ class Deployment:
     """An executable deployment: programs + placement + analytic model."""
 
     strategy: Strategy
-    graph: Graph
     members: list[DeployedMember]
     pus: list[PUSpec]
     rounds: int
@@ -87,13 +101,31 @@ class Deployment:
     def batch(self) -> int:
         return len(self.members)
 
+    @property
+    def workloads(self) -> tuple[Workload, ...]:
+        """Distinct workloads, in first-appearance member order."""
+        return self.strategy.workloads
+
+    @property
+    def is_multi_tenant(self) -> bool:
+        return len(self.workloads) > 1
+
+    @property
+    def graph(self) -> Optional[Graph]:
+        """The single model of a single-tenant deployment (legacy view);
+        ``None`` when members run different workloads."""
+        w = self.workloads
+        return w[0].graph if len(w) == 1 else None
+
     # -- executable form -----------------------------------------------------
     def programs(self, rounds: Optional[int] = None) -> list[PUProgram]:
         """The merged per-PU instruction programs of all members.
 
         ``rounds`` overrides the per-round loop count compiled into the
         programs by patching the terminal ProgCtrl NR field of each group —
-        the same in-BRAM field the host would rewrite on hardware."""
+        the same in-BRAM field the host would rewrite on hardware. Workload
+        ``rounds`` overrides (per-member round semantics) are already
+        compiled in; an explicit ``rounds`` here repatches every member."""
         progs = [p for m in self.members for p in m.compiled.programs]
         if rounds is None:
             return progs
@@ -111,7 +143,16 @@ class Deployment:
     # -- analytic model (the DSE cache, aggregated) --------------------------
     @property
     def predicted_throughput(self) -> float:
+        """Sum of member rates. For a multi-tenant deployment the members'
+        frames are of different models; see ``predicted_throughput_by_workload``
+        for the per-tenant split."""
         return sum(m.predicted_fps for m in self.members)
+
+    def predicted_throughput_by_workload(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for m in self.members:
+            out[m.workload.label] = out.get(m.workload.label, 0.0) + m.predicted_fps
+        return out
 
     @property
     def predicted_latency(self) -> float:
@@ -122,9 +163,15 @@ class Deployment:
         return sum(m.compiled.used_tops for m in self.members)
 
     def predicted_ce(self, peak_tops: Optional[float] = None) -> float:
-        """CE = achieved GOPS / peak GOPS (defaults to the assigned PUs)."""
+        """CE = achieved GOPS / peak GOPS (defaults to the assigned PUs).
+
+        Achieved GOPS sums each member's own model work x its own rate, so
+        the metric is well-defined for mixed-model deployments too."""
         peak = peak_tops if peak_tops is not None else self.used_tops
-        gops = 2.0 * self.graph.total_macs() * self.predicted_throughput / 1e9
+        gops = sum(
+            2.0 * m.graph.total_macs() * m.predicted_fps / 1e9
+            for m in self.members
+        )
         return gops / (peak * 1e3) if peak else 0.0
 
     def assert_disjoint(self) -> None:
@@ -139,7 +186,7 @@ class Deployment:
 
 
 def compile_deployment(
-    g: Graph,
+    g: Optional[Graph],
     strategy,
     *,
     pus: Optional[list[PUSpec]] = None,
@@ -147,34 +194,44 @@ def compile_deployment(
     n_io: int = 4,
     n_channels: int = N_HBM_CHANNELS,
 ) -> Deployment:
-    """Compile ``g`` under any schedule-like ``strategy`` (see
-    :meth:`Strategy.of`) into an executable deployment.
+    """Compile any schedule-like ``strategy`` (see :meth:`Strategy.of`) into
+    an executable deployment.
 
-    Each member pipeline is compiled by the single-pipeline framework on a
-    disjoint PU subset and HBM channel pool; the partitioning that previously
-    had to be hand-wired through ``compile_model(pid_offset=...,
-    channel_pool=...)`` happens here."""
-    strategy = Strategy.of(strategy)
+    ``g`` is broadcast onto every member that does not already carry its own
+    :class:`Workload`; pass ``g=None`` for a fully multi-tenant strategy
+    (every member workload-bound). Each member pipeline is compiled by the
+    single-pipeline framework — against its own graph — on a disjoint PU
+    subset and HBM channel pool; the partitioning that previously had to be
+    hand-wired through ``compile_model(pid_offset=..., channel_pool=...)``
+    happens here."""
+    strategy = Strategy.of(strategy).with_workload(g)
+    unbound = [i for i, m in enumerate(strategy.members) if m.workload is None]
+    if unbound:
+        raise ValueError(
+            f"strategy {strategy} has no workload for member(s) {unbound} "
+            "and no graph was given to broadcast"
+        )
     pus = pus if pus is not None else make_u50_system()
     placement = partition_resources(strategy, pus, n_channels=n_channels)
 
     members: list[DeployedMember] = []
-    for res in placement:
-        a, b = res.config
+    for member, res in zip(strategy.members, placement):
+        workload = member.workload
         cm = compile_model(
-            g,
-            a,
-            b,
+            workload.graph,
+            member.a,
+            member.b,
             pus=pus,
-            rounds=rounds,
+            rounds=workload.rounds if workload.rounds is not None else rounds,
             n_io=n_io,
             pid_offset=res.pid_offset if strategy.batch > 1 else None,
             channel_pool=list(res.channel_pool) if strategy.batch > 1 else None,
         )
         members.append(DeployedMember(index=res.index, config=res.config,
-                                      compiled=cm, resources=res))
+                                      workload=workload, compiled=cm,
+                                      resources=res))
 
-    dep = Deployment(strategy=strategy, graph=g, members=members, pus=pus,
+    dep = Deployment(strategy=strategy, members=members, pus=pus,
                      rounds=rounds)
     dep.assert_disjoint()
     return dep

@@ -13,6 +13,12 @@ ICU BRAMs. :class:`System` is that story as an API:
 the *current* machine — it never rebuilds the PU array, only resets the
 transient kernel/ICU/ISU state (BRAM program images, LUTRAMs, buffers), so a
 switch-then-run is bit-identical to a fresh load-then-run.
+
+Deployments whose member sets differ in *model*, not just shape, swap the
+same way: going from a single-tenant DP-A to a two-tenant ResNet+ViT split
+(per-member :class:`~repro.deploy.Workload`) is still just new instruction
+programs on the unchanged PU array — no reconfiguration, and the per-tenant
+rates come back through ``SimResult.fps_by_workload``.
 """
 from __future__ import annotations
 
@@ -40,14 +46,27 @@ class System:
                 "hardware than this system (PU array is fixed at session start)"
             )
 
+    @property
+    def tenants(self) -> tuple[str, ...]:
+        """Workload labels of the active deployment (empty before load)."""
+        if self.deployment is None:
+            return ()
+        return tuple(w.label for w in self.deployment.workloads)
+
     def load(self, deployment: Deployment) -> "System":
-        """Stage ``deployment`` as the active strategy (chainable)."""
+        """Stage ``deployment`` as the active strategy (chainable).
+
+        The deployment may serve any mix of workloads — a multi-tenant
+        member set loads exactly like a single-model one, since only the
+        instruction programs differ."""
         self._check_compatible(deployment)
         self.deployment = deployment
         return self
 
     def switch(self, deployment: Deployment) -> "System":
-        """Swap to another strategy on the *unchanged* hardware.
+        """Swap to another strategy on the *unchanged* hardware — including
+        one whose members run different models (single-tenant -> multi-tenant
+        and back).
 
         Equivalent to :meth:`load`; requires that a deployment is already
         active, which is what makes it a switch."""

@@ -1,24 +1,33 @@
 # DSE methodology (paper Sec. V-A): single-batch enumeration, multi-batch
-# hybrid-parallel composition, Pareto analysis.
+# hybrid-parallel composition, Pareto analysis — plus multi-tenant
+# co-exploration (joint placements of several models on one machine).
 from .explorer import (
     DSEResult,
     MultiBatchSchedule,
+    MultiDSEResult,
+    MultiTenantPoint,
+    MultiTenantValidationRecord,
     SingleBatchPoint,
     ValidationRecord,
     enumerate_multi_batch,
     enumerate_single_batch,
     explore,
+    explore_multi,
 )
 from .pareto import constrained, pareto_front
 
 __all__ = [
     "DSEResult",
     "MultiBatchSchedule",
+    "MultiDSEResult",
+    "MultiTenantPoint",
+    "MultiTenantValidationRecord",
     "SingleBatchPoint",
     "ValidationRecord",
     "enumerate_multi_batch",
     "enumerate_single_batch",
     "explore",
+    "explore_multi",
     "constrained",
     "pareto_front",
 ]

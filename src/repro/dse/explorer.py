@@ -11,6 +11,13 @@ parallelism). Schedule metrics: aggregated throughput, system latency (the
 slowest member), cumulative TOPS of assigned PUs.
 
 Step 3 — Pareto analysis (repro.dse.pareto) + application constraints.
+
+Multi-tenant co-exploration (``explore_multi``) generalizes Step 2 across
+*models*: each tenant graph gets its own Step-1 cache, joint placements
+assign every tenant a disjoint (a, b) slice of the one machine, and the
+Pareto front is taken over the vector of per-tenant rates — the
+FPGA-virtualization scenario (different models serving different tenants)
+on the paper's fixed PU array.
 """
 from __future__ import annotations
 
@@ -213,6 +220,209 @@ class DSEResult:
             if s.configs == target:
                 return s
         raise LookupError("one-PU-per-batch schedule missing")
+
+
+@dataclass(frozen=True)
+class MultiTenantPoint:
+    """One joint placement: tenant ``i`` runs on its own ``configs[i]``
+    slice, with per-tenant analytic rate/latency from that tenant's own
+    Step-1 cache."""
+
+    configs: tuple[tuple[int, int], ...]  # (a, b) per tenant, tenant order
+    fps: tuple[float, ...]
+    latency: tuple[float, ...]
+    tops: float
+
+    @property
+    def batch(self) -> int:
+        return len(self.configs)
+
+    @property
+    def total_a(self) -> int:
+        return sum(c[0] for c in self.configs)
+
+    @property
+    def total_b(self) -> int:
+        return sum(c[1] for c in self.configs)
+
+    @property
+    def system_latency(self) -> float:
+        return max(self.latency)
+
+    def __str__(self) -> str:
+        body = " | ".join(
+            f"({a},{b})@{f:.1f}fps" for (a, b), f in zip(self.configs, self.fps))
+        return f"tenants[{body}]"
+
+
+@dataclass(frozen=True)
+class MultiTenantValidationRecord:
+    """One joint placement simulated end to end: per-tenant simulated rate
+    cross-checked against that tenant's own analytic model."""
+
+    configs: tuple[tuple[int, int], ...]
+    analytic_fps: tuple[float, ...]
+    simulated_fps: tuple[float, ...]
+
+    @property
+    def rel_errs(self) -> tuple[float, ...]:
+        return tuple(
+            abs(s - a) / a if a else float("inf")
+            for a, s in zip(self.analytic_fps, self.simulated_fps)
+        )
+
+    @property
+    def max_rel_err(self) -> float:
+        return max(self.rel_errs)
+
+
+@dataclass
+class MultiDSEResult:
+    """Co-exploration result: joint placements of several tenants on one
+    machine, Pareto-filtered by the vector of per-tenant rates."""
+
+    workloads: tuple  # tuple[Workload, ...]
+    singles: list[list[SingleBatchPoint]]  # Step-1 cache per tenant
+    points: list[MultiTenantPoint]
+    frontier: list[MultiTenantPoint]
+    pus: Optional[list[PUSpec]] = None
+    validation: list[MultiTenantValidationRecord] = field(default_factory=list)
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self.workloads)
+
+    def best_solo_fps(self, i: int) -> float:
+        """Tenant ``i``'s best rate with the whole machine to itself — the
+        normalizer for fairness metrics."""
+        return max(p.fps for p in self.singles[i])
+
+    @property
+    def balanced(self) -> MultiTenantPoint:
+        """The max-min-fair joint placement: maximize the worst tenant's
+        rate relative to what it could do alone on the full machine."""
+        return max(
+            self.frontier,
+            key=lambda p: min(
+                p.fps[i] / self.best_solo_fps(i) for i in range(self.n_tenants)
+            ),
+        )
+
+    def strategy(self, point: MultiTenantPoint):
+        """The joint placement as a workload-bound deploy Strategy."""
+        from ..deploy import Strategy
+
+        return Strategy.tenants(
+            [(w, a, b) for w, (a, b) in zip(self.workloads, point.configs)],
+            name=str(point),
+        )
+
+    def deploy(self, point: MultiTenantPoint, *, rounds: int = 16):
+        """Compile the joint placement into an executable multi-tenant
+        Deployment — every co-exploration point is one call away from the
+        simulator, exactly like single-model DSE points."""
+        from ..deploy import compile_deployment
+
+        return compile_deployment(None, self.strategy(point), pus=self.pus,
+                                  rounds=rounds)
+
+    def simulate(self, point: MultiTenantPoint, *, rounds: int = 5):
+        from ..deploy import System
+
+        dep = self.deploy(point, rounds=rounds)
+        return System(pus=self.pus).load(dep).run()
+
+
+def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
+                  tolerance: float = 0.0, pus: Optional[list[PUSpec]] = None,
+                  validate: int = 0, validate_rounds: int = 5) -> MultiDSEResult:
+    """Co-explore joint placements of several tenant models on one machine.
+
+    ``graphs`` is a list of Graphs (or deploy ``Workload``s), one per tenant.
+    Every tenant is compiled through its own Step-1 enumeration; joint
+    placements give each tenant one disjoint (a, b) member pipeline under
+    the shared PU budget, and the returned frontier is Pareto-optimal in the
+    vector of per-tenant rates (tenant-A fps, tenant-B fps, ...).
+
+    ``validate=N`` deploys + simulates up to N joint placements (the
+    max-min-fair ``balanced`` point first, then the frontier by normalized
+    rate product) and cross-checks each tenant's simulated rate against its
+    own analytic model in ``MultiDSEResult.validation``."""
+    from ..deploy import Workload
+
+    workloads = tuple(Workload.of(g) for g in graphs)
+    if len(workloads) < 2:
+        raise ValueError("explore_multi needs at least two tenant graphs")
+    pus = pus if pus is not None else make_u50_system()
+
+    singles: list[list[SingleBatchPoint]] = []
+    caches: list[dict[tuple[int, int], SingleBatchPoint]] = []
+    for w in workloads:
+        pts, _ = enumerate_single_batch(w.graph, n_pu1x=n_pu1x, n_pu2x=n_pu2x,
+                                        pus=pus)
+        singles.append(pts)
+        caches.append({p.config: p for p in pts})
+
+    # Joint enumeration: one ordered config per tenant, disjoint PU budgets.
+    points: list[MultiTenantPoint] = []
+    cfg_lists = [sorted(c) for c in caches]
+
+    def rec(i: int, rem_a: int, rem_b: int, chosen: list[tuple[int, int]]) -> None:
+        if i == len(workloads):
+            members = [caches[j][c] for j, c in enumerate(chosen)]
+            points.append(
+                MultiTenantPoint(
+                    configs=tuple(chosen),
+                    fps=tuple(m.fps for m in members),
+                    latency=tuple(m.latency for m in members),
+                    tops=sum(m.tops for m in members),
+                )
+            )
+            return
+        for a, b in cfg_lists[i]:
+            if a <= rem_a and b <= rem_b:
+                chosen.append((a, b))
+                rec(i + 1, rem_a - a, rem_b - b, chosen)
+                chosen.pop()
+
+    rec(0, n_pu1x, n_pu2x, [])
+    if not points:
+        raise ValueError(
+            f"no joint placement fits {len(workloads)} tenants in "
+            f"{n_pu1x}x PU1x + {n_pu2x}x PU2x"
+        )
+
+    objectives = [
+        (lambda p, i=i: p.fps[i]) for i in range(len(workloads))
+    ]
+    frontier = pareto_front(points, objectives, tolerance=tolerance)
+
+    res = MultiDSEResult(workloads=workloads, singles=singles, points=points,
+                         frontier=frontier, pus=pus)
+    if validate > 0:
+        norm = [res.best_solo_fps(i) for i in range(res.n_tenants)]
+        candidates = [res.balanced]
+        ranked = sorted(
+            frontier,
+            key=lambda p: -sum(
+                (f / n if n else 0.0) for f, n in zip(p.fps, norm)),
+        )
+        seen = {candidates[0].configs}
+        for p in ranked:
+            if p.configs not in seen:
+                candidates.append(p)
+                seen.add(p.configs)
+        for cand in candidates[:validate]:
+            sim = res.simulate(cand, rounds=validate_rounds)
+            res.validation.append(
+                MultiTenantValidationRecord(
+                    configs=cand.configs,
+                    analytic_fps=cand.fps,
+                    simulated_fps=tuple(
+                        m.throughput_fps(warmup=2) for m in sim.members),
+                )
+            )
+    return res
 
 
 def explore(g: Graph, *, n_pu1x: int = 5, n_pu2x: int = 5,

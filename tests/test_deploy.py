@@ -1,11 +1,19 @@
-"""Deployment layer tests (paper Sec. V): Strategy normalization, disjoint
-resource partitioning, DP-A/B/C compiled to executable deployments, System
-load/switch/run on one fixed machine, and simulated-vs-analytic agreement."""
+"""Deployment layer tests (paper Sec. V): Strategy normalization (including
+per-member Workloads), disjoint resource partitioning with aggregate
+diagnostics, DP-A/B/C compiled to executable deployments, multi-tenant
+(mixed-model) deployments, System load/switch/run on one fixed machine, and
+simulated-vs-analytic agreement."""
 import pytest
 
 from repro.compiler import zoo
 from repro.core.pu import make_u50_system
-from repro.deploy import Strategy, System, compile_deployment, partition_resources
+from repro.deploy import (
+    Strategy,
+    System,
+    Workload,
+    compile_deployment,
+    partition_resources,
+)
 from repro.dse import explore
 
 
@@ -73,6 +81,51 @@ class TestStrategy:
         s = Strategy.multi([(1, 0), (2, 3)])
         assert (s.total_a, s.total_b, s.batch) == (3, 3, 2)
 
+    def test_legacy_tuple_forms_round_trip(self):
+        """Old tuple-shaped strategies normalize and compare equal: members
+        without a workload are interchangeable with their (a, b) tuples."""
+        for form in ((5, 5), [(1, 0), (0, 1)], [(2, 3), (1, 1)]):
+            s = Strategy.of(form)
+            assert Strategy.of(s) is s
+            assert Strategy.of(s.members) == s  # members re-normalize
+            assert Strategy.of(s.configs) == s  # legacy view re-normalizes
+            assert all(m.workload is None for m in s.members)
+        m = Strategy.of((2, 3)).members[0]
+        assert m == (2, 3) and (2, 3) == m
+        assert hash(m) == hash((2, 3))
+        a, b = m  # tuple unpacking still works
+        assert (a, b) == (2, 3)
+
+    def test_workload_members(self):
+        cnn, enc = zoo.tiny_cnn(), zoo.transformer_encoder(
+            "qwen3-0.6b", seq_len=64, depth=1)
+        s = Strategy.tenants([(cnn, 2, 2), (enc, 3, 3)])
+        assert s.is_multi_tenant
+        assert [w.graph for w in s.workloads] == [cnn, enc]
+        assert s.configs == ((2, 2), (3, 3))
+        # a workload-bound member is NOT equal to its bare tuple
+        assert s.members[0] != (2, 2)
+        # (graph, a, b) triples normalize through Strategy.of too
+        assert Strategy.of([(cnn, 2, 2), (enc, 3, 3)]) == s
+
+    def test_broadcast_binds_only_unbound_members(self):
+        cnn, enc = zoo.tiny_cnn(), zoo.linear_chain(3)
+        s = Strategy.multi([(Workload(cnn), 1, 0), (0, 1)]).with_workload(enc)
+        assert s.members[0].workload.graph is cnn
+        assert s.members[1].workload.graph is enc
+
+    def test_tenants_requires_workloads(self):
+        with pytest.raises(ValueError):
+            Strategy.tenants([(1, 0), (0, 1)])
+
+    def test_of_preserves_member_workload(self):
+        """A lone workload-bound Member normalizes without losing its
+        workload (it must not be mistaken for a bare DSE point)."""
+        cnn = zoo.tiny_cnn()
+        m = Strategy.tenants([(cnn, 1, 1)]).members[0]
+        assert Strategy.of(m).members[0].workload.graph is cnn
+        assert Strategy.of([m]).members[0].workload.graph is cnn
+
 
 class TestResourcePartitioning:
     def test_members_get_disjoint_channels(self):
@@ -88,6 +141,41 @@ class TestResourcePartitioning:
     def test_oversubscription_rejected(self):
         with pytest.raises(ValueError):
             partition_resources(Strategy.of([(5, 5), (1, 0)]), make_u50_system())
+
+    def test_diagnostics_name_each_member(self):
+        """An infeasible strategy reports every member's demand against the
+        machine in one error, instead of failing deep inside compilation."""
+        cnn, enc = zoo.tiny_cnn(), zoo.transformer_encoder(
+            "qwen3-0.6b", seq_len=64, depth=1)
+        strat = Strategy.tenants([(cnn, 5, 5), (enc, 1, 0)])
+        with pytest.raises(ValueError) as ei:
+            partition_resources(strat, make_u50_system())
+        msg = str(ei.value)
+        assert "member 0 [tiny_cnn]: 5x PU1x + 5x PU2x" in msg
+        assert "member 1 [qwen3-0_6b_enc1_s64]: 1x PU1x + 0x PU2x" in msg
+        assert "PU1x overcommitted: 6 requested, 5 available" in msg
+
+    def test_channel_overcommit_diagnosed(self):
+        with pytest.raises(ValueError) as ei:
+            partition_resources(Strategy.of([(1, 0)] * 3), make_u50_system(),
+                                n_channels=2)
+        msg = str(ei.value)
+        assert "HBM channels overcommitted" in msg
+        assert "member 2" in msg
+
+    def test_traffic_weighted_channel_shares(self):
+        """In a mixed-model deployment the streaming-heavier tenant gets the
+        wider channel slice (slice sizing follows each member's own memory
+        footprint, not just its PU count)."""
+        cnn = zoo.tiny_cnn(channels=(16, 32, 32), hw=16)
+        enc = zoo.transformer_encoder("qwen3-0.6b", seq_len=256, depth=2)
+        res = partition_resources(
+            Strategy.tenants([(cnn, 2, 2), (enc, 2, 2)]), make_u50_system())
+        assert len(res[1].channel_pool) > len(res[0].channel_pool)
+        # same workload on both members -> back to the PU-count split
+        res_eq = partition_resources(
+            Strategy.tenants([(cnn, 2, 2), (cnn, 2, 2)]), make_u50_system())
+        assert len(res_eq[0].channel_pool) == len(res_eq[1].channel_pool)
 
 
 class TestCompiledDeployments:
@@ -166,6 +254,74 @@ class TestSystemExecution:
         assert len(names) >= 3
 
 
+class TestMultiTenant:
+    """Mixed-model deployments (acceptance criterion): a ResNet-50 member
+    and a qwen3-encoder member on disjoint PU/HBM slices compile, simulate
+    deadlock-free, each member within 10% of its own analytic model, and a
+    single-tenant -> two-tenant switch is bit-identical to a fresh load."""
+
+    @pytest.fixture(scope="class")
+    def qwen_graph(self):
+        return zoo.transformer_encoder("qwen3-0.6b", seq_len=256, depth=2)
+
+    @pytest.fixture(scope="class")
+    def mixed_dep(self, graph, qwen_graph):
+        strat = Strategy.tenants([(graph, 2, 2), (qwen_graph, 3, 3)],
+                                 name="resnet+qwen")
+        return compile_deployment(None, strat, rounds=5)
+
+    @pytest.fixture(scope="class")
+    def mixed_sim(self, mixed_dep):
+        return System().load(mixed_dep).run()
+
+    def test_disjoint_slices_and_labels(self, mixed_dep, graph, qwen_graph):
+        mixed_dep.assert_disjoint()
+        assert mixed_dep.is_multi_tenant
+        assert mixed_dep.graph is None  # no single-model view of a mixed set
+        assert [m.workload.graph for m in mixed_dep.members] == [graph, qwen_graph]
+
+    def test_each_member_within_10pct_of_its_analytic(self, mixed_dep, mixed_sim):
+        assert not mixed_sim.deadlocked
+        for sm, dm in zip(mixed_sim.members, mixed_dep.members):
+            assert sm.workload == dm.workload.label
+            assert sm.throughput_fps(warmup=2) == pytest.approx(
+                dm.predicted_fps, rel=0.10)
+
+    def test_per_tenant_rates_attributable(self, mixed_dep, mixed_sim):
+        rates = mixed_sim.fps_by_workload(warmup=2)
+        assert set(rates) == {w.label for w in mixed_dep.workloads}
+        assert sum(rates.values()) == pytest.approx(
+            mixed_sim.aggregate_fps(warmup=2))
+        pred = mixed_dep.predicted_throughput_by_workload()
+        assert set(pred) == set(rates)
+
+    def test_single_to_two_tenant_switch_bit_identical(self, dep_a, mixed_dep):
+        """Acceptance: System.switch from a single-tenant deployment to the
+        two-tenant split reproduces fresh-load results bit-identically."""
+        system = System()
+        system.load(dep_a).run()
+        assert system.tenants == (dep_a.members[0].workload.label,)
+        switched = system.switch(mixed_dep).run()
+        fresh = System().load(mixed_dep).run()
+        assert switched.round_end_cycles == fresh.round_end_cycles
+        assert switched.round_latencies_cycles == fresh.round_latencies_cycles
+        assert switched.aggregate_fps(warmup=2) == pytest.approx(
+            fresh.aggregate_fps(warmup=2), rel=1e-12)
+
+    def test_workload_rounds_override(self):
+        g = zoo.tiny_cnn()
+        w = Workload(g, rounds=3)
+        dep = compile_deployment(None, Strategy.single(1, 1, workload=w),
+                                 rounds=7)
+        assert all(p.ld.progctrl.nr == 3 for p in dep.programs())
+        # an explicit programs(rounds=...) still repatches every member
+        assert all(p.ld.progctrl.nr == 2 for p in dep.programs(rounds=2))
+
+    def test_unbound_members_need_graph(self):
+        with pytest.raises(ValueError):
+            compile_deployment(None, (2, 2))
+
+
 class TestConformance:
     """Analytic-vs-simulated conformance guard (locks in the validation PR 1
     measured on ResNet-50: 7.2% / 3.2% / 3.3% for DP-A/B/C) on a small CNN
@@ -176,7 +332,11 @@ class TestConformance:
     # (design point, rounds, fixed relative tolerance) — dp_c directly after
     # dp_a so the session performs the acceptance criterion's DP-A -> DP-C
     # switch (single-member to 10-member on the unchanged machine).
-    PLAN = [("dp_a", 6, 0.09), ("dp_c", 5, 0.05), ("dp_b", 5, 0.06)]
+    # Tolerances tightened with the instruction-granular analytic model
+    # (per-instruction decode, per-transfer ADM floors, node-granular weight
+    # stalls): observed errors are 6.8%/1.8%/3.2% (tiny_cnn) and
+    # 4.5%/0.6%/0.8% (qwen encoder) for DP-A/C/B.
+    PLAN = [("dp_a", 6, 0.08), ("dp_c", 5, 0.03), ("dp_b", 5, 0.045)]
 
     @pytest.fixture(scope="class")
     def cnn_runs(self):

@@ -1,4 +1,5 @@
-"""DSE methodology tests (paper Sec. V-A, Figs. 5/6, Table III claims)."""
+"""DSE methodology tests (paper Sec. V-A, Figs. 5/6, Table III claims) and
+multi-tenant co-exploration (joint placements of several models)."""
 import pytest
 
 from repro.compiler import zoo
@@ -7,6 +8,7 @@ from repro.dse import (
     enumerate_multi_batch,
     enumerate_single_batch,
     explore,
+    explore_multi,
     pareto_front,
 )
 
@@ -110,3 +112,59 @@ class TestPaperClaims:
         for p in dse.single:
             if p.a + p.b == 1:
                 assert p.pbe == pytest.approx(1.0)
+
+
+class TestExploreMulti:
+    """Co-exploration: joint placements of two tenant models (Sec. V-A
+    generalized across the workload axis)."""
+
+    @pytest.fixture(scope="class")
+    def pair(self):
+        return (zoo.tiny_cnn(channels=(16, 32, 32), hw=16),
+                zoo.transformer_encoder("qwen3-0.6b", seq_len=64, depth=1))
+
+    @pytest.fixture(scope="class")
+    def mres(self, pair):
+        return explore_multi(list(pair), validate=1, validate_rounds=6)
+
+    def test_joint_placements_respect_budget(self, mres):
+        assert mres.points
+        for p in mres.points:
+            assert p.batch == 2
+            assert p.total_a <= 5 and p.total_b <= 5
+
+    def test_frontier_nondominated_in_tenant_rates(self, mres):
+        assert mres.frontier
+        for f in mres.frontier:
+            assert not any(
+                all(o.fps[i] >= f.fps[i] for i in range(2))
+                and any(o.fps[i] > f.fps[i] for i in range(2))
+                for o in mres.points
+            )
+
+    def test_balanced_point_is_max_min_fair(self, mres):
+        solo = [mres.best_solo_fps(i) for i in range(2)]
+        fair = min(mres.balanced.fps[i] / solo[i] for i in range(2))
+        for p in mres.frontier:
+            assert fair >= min(p.fps[i] / solo[i] for i in range(2)) - 1e-12
+
+    def test_points_deploy_as_two_tenant_deployments(self, mres, pair):
+        strat = mres.strategy(mres.balanced)
+        assert strat.is_multi_tenant
+        assert tuple(w.graph for w in strat.workloads) == tuple(pair)
+        dep = mres.deploy(mres.balanced, rounds=2)
+        dep.assert_disjoint()
+        assert dep.batch == 2
+        labels = [m.workload.label for m in dep.members]
+        assert labels == [g.name for g in pair]
+
+    def test_validation_cross_checks_each_tenant(self, mres):
+        assert len(mres.validation) == 1
+        rec = mres.validation[0]
+        assert rec.configs == mres.balanced.configs
+        assert len(rec.rel_errs) == 2
+        assert rec.max_rel_err < 0.10
+
+    def test_rejects_single_tenant(self):
+        with pytest.raises(ValueError):
+            explore_multi([zoo.tiny_cnn()])
