@@ -16,9 +16,26 @@
                           max-min-fair split deployed, and a mid-session
                           switch from single-tenant DP-A to the two-tenant
                           deployment with no reconfiguration
+  decode_point         -- beyond the paper: autoregressive decode serving —
+                          the qwen3 decode graph (growing K/V caches via the
+                          AddrLen/CYCLE_LEN length-advance instructions)
+                          through the same DSE, one full decode window
+                          simulated, and a prefill->decode hot swap
+
+Run as a script for the CI conformance smoke::
+
+    PYTHONPATH=src python benchmarks/paper_repro.py --ci --out BENCH_ci.json
+
+``--ci`` executes a tiny fixed set of deployments (CNN, prefill transformer,
+decode transformer), records per-point analytic-vs-simulated prediction
+error into a JSON artifact, and exits nonzero if any point exceeds its
+conformance tolerance.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
 
 from repro.compiler import zoo
@@ -279,6 +296,40 @@ def multi_tenant_point() -> list[str]:
     return rows
 
 
+def decode_point() -> list[str]:
+    """Autoregressive decode serving on the same machine: the qwen3 decode
+    graph (one token per round, K/V caches growing via CYCLE_LEN) through
+    the full DSE, DP-A simulated over one complete decode window, and the
+    prefill->decode hot swap measured on one fixed PU array."""
+    seq, steps, depth = 256, 64, 4
+    prefill = zoo.transformer_encoder("qwen3-0.6b", seq_len=seq, depth=depth)
+    decode = zoo.transformer_decoder("qwen3-0.6b", seq_len=seq,
+                                     decode_steps=steps, depth=depth)
+    dse = explore(decode)
+    rows = []
+    for name, dp in (("DP-A", dse.dp_a), ("DP-B", dse.dp_b), ("DP-C", dse.dp_c)):
+        rows.append(
+            f"decode.{decode.name}.{name},,batch={dp.batch};"
+            f"tok_s={dp.throughput:.1f};latency_ms={dp.latency*1e3:.3f}"
+        )
+
+    system = System()
+    sim_pre = system.load(compile_deployment(prefill, (2, 2), rounds=4)).run()
+    dep = dse.deploy(dse.dp_a)  # rounds default to the decode window
+    t0 = time.perf_counter()
+    sim = system.switch(dep).run()
+    wall_us = (time.perf_counter() - t0) * 1e6
+    tok_s = sim.aggregate_fps(warmup=2)
+    rows.append(
+        f"decode.switch_prefill_to_decode,{wall_us:.0f},"
+        f"prefill_seq_s={sim_pre.aggregate_fps(warmup=2):.1f};"
+        f"decode_tok_s={tok_s:.1f};steps={sim.members[0].rounds};"
+        f"pred_err={abs(tok_s - dep.predicted_throughput)/dep.predicted_throughput:.3f};"
+        f"deadlock={int(sim.deadlocked)};loads={len(system.history)};reconfigured=0"
+    )
+    return rows
+
+
 def run() -> list[str]:
     out = []
     g = zoo.resnet50(256)
@@ -291,4 +342,91 @@ def run() -> list[str]:
     out += simulated_design_points(dse)
     out += transformer_point()
     out += multi_tenant_point()
+    out += decode_point()
     return out
+
+
+# ----------------------------------------------------------- CI conformance --
+def ci_points() -> list[dict]:
+    """Tiny fixed deployments spanning the three frontends (CNN, prefill
+    transformer, decode transformer), each simulated on a fresh System and
+    scored as analytic-vs-simulated relative error against the same fixed
+    tolerances the conformance tests lock in (tests/test_deploy.py)."""
+    from repro.configs import get_config
+
+    dp_c = [(1, 0)] * 5 + [(0, 1)] * 5
+    plan = [
+        # (point name, graph, strategy, rounds override, tolerance)
+        ("tiny_cnn.dp_a", zoo.tiny_cnn(channels=(16, 32, 32), hw=16),
+         (5, 5), 6, 0.08),
+        ("tiny_cnn.dp_c", zoo.tiny_cnn(channels=(16, 32, 32), hw=16),
+         dp_c, 5, 0.03),
+        # fixed (2,2)+(3,3) hybrid (not the explore-selected DP-B, which the
+        # conformance tests lock at 4.5%): observed 5.1%, guarded at 6%
+        ("tiny_cnn.hybrid", zoo.tiny_cnn(channels=(16, 32, 32), hw=16),
+         [(2, 2), (3, 3)], 5, 0.06),
+        ("qwen3_enc.dp_a", zoo.transformer_encoder("qwen3-0.6b", seq_len=64,
+                                                   depth=1), (2, 2), 5, 0.08),
+        ("qwen3_dec.dp_a", zoo.transformer_decoder("qwen3-0.6b", seq_len=64,
+                                                   decode_steps=8, depth=4),
+         (5, 5), None, 0.10),
+        ("qwen3_dec_reduced.dp_c",
+         zoo.transformer_decoder(get_config("qwen3-0.6b").reduced(),
+                                 seq_len=64, decode_steps=8, depth=4),
+         dp_c, None, 0.10),
+    ]
+    points = []
+    for name, g, strategy, rounds, tol in plan:
+        dep = compile_deployment(g, strategy, rounds=rounds)
+        t0 = time.perf_counter()
+        sim = System().load(dep).run()
+        wall_s = time.perf_counter() - t0
+        meas = sim.aggregate_fps(warmup=2)
+        pred = dep.predicted_throughput
+        err = abs(meas - pred) / pred if pred else float("inf")
+        points.append({
+            "name": name,
+            "graph": g.name,
+            "batch": dep.batch,
+            "analytic_fps": pred,
+            "simulated_fps": meas,
+            "rel_err": err,
+            "tolerance": tol,
+            "deadlocked": sim.deadlocked,
+            "ok": (not sim.deadlocked) and err <= tol,
+            "sim_wall_s": wall_s,
+        })
+    return points
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ci", action="store_true",
+                    help="tiny conformance smoke: JSON artifact + pass/fail")
+    ap.add_argument("--out", default="BENCH_ci.json",
+                    help="artifact path for --ci mode")
+    args = ap.parse_args()
+
+    if not args.ci:
+        for row in run():
+            print(row)
+        return 0
+
+    points = ci_points()
+    report = {
+        "points": points,
+        "max_rel_err": max(p["rel_err"] for p in points),
+        "ok": all(p["ok"] for p in points),
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    for p in points:
+        print(f"{p['name']:28s} analytic={p['analytic_fps']:9.1f} "
+              f"simulated={p['simulated_fps']:9.1f} err={p['rel_err']:.3f} "
+              f"tol={p['tolerance']:.3f} {'ok' if p['ok'] else 'FAIL'}")
+    print(f"max_rel_err={report['max_rel_err']:.3f} -> {args.out}")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

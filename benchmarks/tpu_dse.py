@@ -4,7 +4,7 @@ architecture, Pareto-filter, and report the paper's three canonical points
 (pure pipeline / best hybrid / pure batch)."""
 from __future__ import annotations
 
-from repro.configs import all_configs, get_config
+from repro.configs import get_config
 from repro.dse.tpu_deploy import explore_tpu
 
 ARCHS = ["qwen3-0.6b", "h2o-danube-3-4b", "starcoder2-15b", "internvl2-76b"]

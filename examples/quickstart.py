@@ -7,7 +7,7 @@ execute them on the discrete-event simulator — the paper's core loop
 import argparse
 
 from repro.compiler import compile_model, zoo
-from repro.core import Group, simulate
+from repro.core import simulate
 
 
 def main() -> None:

@@ -20,18 +20,17 @@ LD/CP/ST instruction programs per PU:
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 
 from ..core.isa import (
     AddrCyc,
+    AddrLen,
     Compute,
     Config,
     DataMove,
     Group,
     Instruction,
     Opcode,
-    ProgCtrl,
     Sync,
 )
 from ..core.program import Program, PUProgram
@@ -145,9 +144,10 @@ def generate_programs(
             # output store
             out_tid = nd.outputs[0]
             oplan = mem.tensors[out_tid]
+            otinfo = g.tensors[out_tid]
             consumers = [c for c in g.consumers_of(out_tid) if c.nid in stage_of]
             if oplan.kind == "output" or not consumers:
-                _emit_write(ctx.st, oplan)
+                _emit_write(ctx.st, oplan, otinfo)
             else:
                 cons_pids = [pid_map[stage_of[c.nid]] for c in consumers]
                 for cpid in cons_pids:
@@ -156,7 +156,7 @@ def generate_programs(
                 for cpid in cons_pids:
                     if cpid == pid:
                         ctx.st.append(_sync(Opcode.SEND_REQ, cpid, oplan))
-                _emit_write(ctx.st, oplan)
+                _emit_write(ctx.st, oplan, otinfo)
                 for cpid in cons_pids:
                     if cpid != pid:
                         ctx.st.append(_sync(Opcode.SEND_REQ, cpid, oplan))
@@ -177,15 +177,30 @@ def generate_programs(
             # for the context GEMM) is an *activation* streamed through the
             # SA weight port — one WEIGHTS_ADM over the producer's cyclic
             # region, counted in Compute.wchunks so the URAM read interlock
-            # holds the GEMM until the stream has landed.
+            # holds the GEMM until the stream has landed. A K/V cache operand
+            # (autoregressive decode) keeps a fixed base address but its
+            # transfer *length* advances one row per round (AddrLen).
             if nd.op in (OpType.ATTN_SCORE, OpType.ATTN_CONTEXT):
                 splan = mem.tensors[nd.inputs[1]]
+                stinfo = g.tensors[nd.inputs[1]]
                 ctx.cp.append(Config(op=Opcode.URAM_PRM, param0=0))
-                ctx.cp.append(
-                    DataMove(op=Opcode.WEIGHTS_ADM, cur_ba=splan.base_addr,
-                             length=splan.region_bytes, channel=splan.read_channel)
-                )
-                ctx.cp.append(_addrcyc(splan))
+                if stinfo.is_kv_cache:
+                    row = stinfo.kv_row_stride
+                    len0 = (stinfo.kv_base_rows + 1) * row
+                    steps = stinfo.kv_steps
+                    ctx.cp.append(
+                        DataMove(op=Opcode.WEIGHTS_ADM, cur_ba=splan.base_addr,
+                                 length=len0, channel=splan.read_channel)
+                    )
+                    ctx.cp.append(AddrLen(len_base=len0, loffs=row,
+                                          nc=steps - 1, ic=steps - 1))
+                else:
+                    ctx.cp.append(
+                        DataMove(op=Opcode.WEIGHTS_ADM, cur_ba=splan.base_addr,
+                                 length=splan.region_bytes,
+                                 channel=splan.read_channel)
+                    )
+                    ctx.cp.append(_addrcyc(splan))
                 nchunks += 1
             # 2) flush the previous node's compute ops.
             if pending_cp:
@@ -279,7 +294,21 @@ def _emit_read(body: list[Instruction], nd: Node, plan: TensorPlan) -> None:
     body.append(_addrcyc(plan))
 
 
-def _emit_write(body: list[Instruction], plan: TensorPlan) -> None:
+def _emit_write(body: list[Instruction], plan: TensorPlan,
+                tinfo=None) -> None:
+    if tinfo is not None and tinfo.is_kv_cache:
+        # append-only K/V region: one row per round, the address advancing
+        # from the end of the prefill prefix across the decode window, then
+        # wrapping for the next sequence.
+        row = tinfo.kv_row_stride
+        ba = plan.base_addr + tinfo.kv_base_rows * row
+        steps = tinfo.kv_steps
+        body.append(
+            DataMove(op=Opcode.LINEAR_ADM, cur_ba=ba, length=row,
+                     channel=plan.write_channel)
+        )
+        body.append(AddrCyc(ba=ba, aoffs=row, nc=steps - 1, ic=steps - 1))
+        return
     body.append(
         DataMove(op=Opcode.LINEAR_ADM, cur_ba=plan.base_addr,
                  length=plan.region_bytes, channel=plan.write_channel)

@@ -8,8 +8,7 @@ model used by the DSE (Sec. V-A).
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 from ..core.program import PUProgram

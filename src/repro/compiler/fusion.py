@@ -50,6 +50,7 @@ def fuse(g: Graph) -> Graph:
     out._next_tid = g._next_tid
     out.input_tensors = list(g.input_tensors)
     out.output_tensors = list(g.output_tensors)
+    out.attrs = dict(g.attrs)  # decode-phase metadata survives fusion
 
     # tensor rewiring: fused chains alias their intermediate tensors to the
     # final output tensor of the chain.

@@ -14,8 +14,8 @@ from __future__ import annotations
 
 import enum
 import math
-from dataclasses import dataclass, field, replace
-from typing import Iterable, Optional
+from dataclasses import dataclass, field
+from typing import Optional
 
 
 class OpType(enum.Enum):
@@ -50,12 +50,20 @@ ATTN_GEMM_OPS = frozenset({OpType.ATTN_SCORE, OpType.ATTN_CONTEXT})
 
 @dataclass(frozen=True)
 class TensorInfo:
-    """A tensor edge in the DAG (activation tensor, NCHW)."""
+    """A tensor edge in the DAG (activation tensor, NCHW).
+
+    ``kv_base_rows >= 0`` marks an *append-only K/V cache region* for
+    autoregressive decode: ``shape[0]`` is the maximum row count (prefill
+    prefix + decode window), the prefill phase populated the first
+    ``kv_base_rows`` rows, and each program round appends exactly one row
+    while reads cover the full valid prefix (which therefore *grows* one row
+    per round — the AddrLen/CYCLE_LEN semantics)."""
 
     tid: int
     name: str
     shape: tuple[int, ...]  # (C, H, W) activation or (N,) flat
     dtype_bytes: int = 1  # INT8
+    kv_base_rows: int = -1  # >= 0: append-only K/V cache (see above)
 
     @property
     def nbytes(self) -> int:
@@ -64,6 +72,48 @@ class TensorInfo:
     @property
     def nbytes_padded(self) -> int:
         return (self.nbytes + 63) // 64 * 64  # 64B AXI-beat alignment
+
+    # -- K/V cache geometry (decode-phase scheduling) ------------------------
+    @property
+    def is_kv_cache(self) -> bool:
+        return self.kv_base_rows >= 0
+
+    @property
+    def kv_steps(self) -> int:
+        """Decode rounds covered by the region (appended rows)."""
+        return self.shape[0] - self.kv_base_rows
+
+    @property
+    def kv_row_stride(self) -> int:
+        """Beat-aligned bytes of one appended row (one token's K or V)."""
+        row = int(math.prod(self.shape[1:])) * self.dtype_bytes
+        return (row + 63) // 64 * 64
+
+    @property
+    def kv_avg_rows(self) -> float:
+        """Mean valid length over the decode window: round r reads
+        base + r + 1 rows, so the average is base + (steps + 1) / 2."""
+        return self.kv_base_rows + (self.kv_steps + 1) / 2
+
+    @property
+    def kv_region_bytes(self) -> int:
+        """Full single-region allocation (max rows, row-stride padded)."""
+        return self.shape[0] * self.kv_row_stride
+
+    # -- per-round traffic views (used by the analytic model) ----------------
+    @property
+    def stream_bytes(self) -> int:
+        """Per-round bytes when streamed through the SA weight port: the
+        average valid prefix for caches, the whole tensor otherwise."""
+        if self.is_kv_cache:
+            return int(self.kv_avg_rows * self.kv_row_stride)
+        return self.nbytes_padded
+
+    @property
+    def write_bytes(self) -> int:
+        """Per-round bytes stored by the producer: one appended row for
+        caches, the whole tensor otherwise."""
+        return self.kv_row_stride if self.is_kv_cache else self.nbytes_padded
 
 
 @dataclass
@@ -119,12 +169,17 @@ class Graph:
     tensors: dict[int, TensorInfo] = field(default_factory=dict)
     input_tensors: list[int] = field(default_factory=list)
     output_tensors: list[int] = field(default_factory=list)
+    # graph-level metadata (e.g. decode phase: {"phase": "decode",
+    # "prefill_len": S, "decode_steps": T} — one program round = one token)
+    attrs: dict = field(default_factory=dict)
     _next_tid: int = 0
     _next_nid: int = 0
 
     # -- construction --------------------------------------------------------
-    def add_tensor(self, name: str, shape: tuple[int, ...], dtype_bytes: int = 1) -> TensorInfo:
-        t = TensorInfo(self._next_tid, name, tuple(shape), dtype_bytes)
+    def add_tensor(self, name: str, shape: tuple[int, ...], dtype_bytes: int = 1,
+                   kv_base_rows: int = -1) -> TensorInfo:
+        t = TensorInfo(self._next_tid, name, tuple(shape), dtype_bytes,
+                       kv_base_rows=kv_base_rows)
         self.tensors[t.tid] = t
         self._next_tid += 1
         return t
@@ -136,6 +191,13 @@ class Graph:
         return node
 
     # -- queries --------------------------------------------------------------
+    @property
+    def decode_steps(self) -> Optional[int]:
+        """Decode-window length of a decode-phase graph (``None`` for
+        prefill/CNN graphs). One program round advances one decode step."""
+        steps = self.attrs.get("decode_steps")
+        return int(steps) if steps else None
+
     def producer_of(self, tid: int) -> Optional[Node]:
         for nd in self.nodes:
             if tid in nd.outputs:

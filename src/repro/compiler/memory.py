@@ -7,7 +7,11 @@
 
    The +1 buffer lets producers write new data while consumers read
    previously loaded data. Graph inputs/outputs (A/C-regions) get ``n_io``
-   cyclic regions coordinated with the PCIe host.
+   cyclic regions coordinated with the PCIe host. K/V cache tensors
+   (autoregressive decode) keep the stage-distance *credit* depth for the
+   REQ/ACK handshake but occupy a single append-only region sized for the
+   full window — per-round writes append one row while reads cover the
+   growing valid prefix, so no region copies are needed.
 
 2. Tensor liveness analysis: simulate the steady-state pipeline schedule
    (node-to-PU mappings x profiled times) to find the temporal access window
@@ -19,12 +23,11 @@
 from __future__ import annotations
 
 import itertools
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 from ..core.pu import N_HBM_CHANNELS
-from .graph import Graph, OpType
+from .graph import Graph
 from .partition import Partition
 from .profiler import NodeProfile
 
@@ -32,7 +35,7 @@ from .profiler import NodeProfile
 @dataclass
 class TensorPlan:
     tid: int
-    beta: int  # number of cyclic buffer regions
+    beta: int  # number of cyclic buffer regions (sync credit depth)
     region_bytes: int  # 64B-aligned size of one region
     base_addr: int = 0  # HBM base of region 0
     bid_base: int = 0  # global BID range [bid_base, bid_base+beta-1]
@@ -40,7 +43,15 @@ class TensorPlan:
     write_channel: int = 0
     producer_stage: Optional[int] = None
     consumer_stages: tuple[int, ...] = ()
-    kind: str = "intermediate"  # "input" | "output" | "intermediate"
+    kind: str = "intermediate"  # "input" | "output" | "intermediate" | "kv"
+
+    @property
+    def n_regions(self) -> int:
+        """Physical HBM regions. A K/V cache is *one* append-only region
+        regardless of its sync credit depth: rows written this round are
+        disjoint from the prefix earlier rounds read, so the REQ/ACK credits
+        (beta) pipeline producer and consumer without region copies."""
+        return 1 if self.kind == "kv" else self.beta
 
 
 @dataclass
@@ -60,6 +71,12 @@ def buffer_requirements(g: Graph, part: Partition, n_io: int = 4) -> dict[int, T
     for tid, tinfo in g.tensors.items():
         producer = g.producer_of(tid)
         consumers = g.consumers_of(tid)
+        if tinfo.is_kv_cache and (tid in g.input_tensors or tid in g.output_tensors):
+            # host A/C-region cycling (n_io regions) and append-only
+            # single-region addressing are mutually exclusive
+            raise ValueError(
+                f"K/V cache tensor {tinfo.name!r} cannot be a graph input/output"
+            )
         if tid in g.input_tensors:
             beta, kind = n_io, "input"
             pstage = None
@@ -75,11 +92,12 @@ def buffer_requirements(g: Graph, part: Partition, n_io: int = 4) -> dict[int, T
             cstages = tuple(sorted({stage_of[c.nid] for c in consumers}))
             dist = max(cs - pstage for cs in cstages)
             beta = dist + 1
-            kind = "intermediate"
+            kind = "kv" if tinfo.is_kv_cache else "intermediate"
         plans[tid] = TensorPlan(
             tid=tid,
             beta=beta,
-            region_bytes=tinfo.nbytes_padded,
+            region_bytes=tinfo.kv_region_bytes if tinfo.is_kv_cache
+            else tinfo.nbytes_padded,
             producer_stage=pstage,
             consumer_stages=cstages,
             kind=kind,
@@ -217,7 +235,7 @@ def assign_channels(
 
     for tid, plan in sorted(plans.items()):
         plan.base_addr = addr
-        addr += align(plan.region_bytes) * plan.beta
+        addr += align(plan.region_bytes) * plan.n_regions
         plan.read_channel = color.get((tid, "r"), pool[0])
         plan.write_channel = color.get((tid, "w"), pool[-1])
 

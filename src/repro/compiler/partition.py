@@ -14,11 +14,10 @@ allowed (a configuration may leave PUs idle if that is optimal).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import lru_cache
-from typing import Optional
 
-from .graph import Graph, Node
+from .graph import Graph
 from .profiler import NodeProfile
 
 INF = float("inf")
@@ -81,8 +80,6 @@ def partition(
 
     def seg_cost(kind: str, i: int, j: int) -> float:
         return prefix[kind][j] - prefix[kind][i]
-
-    from functools import lru_cache
 
     @lru_cache(maxsize=None)
     def f(i: int, u1: int, u2: int) -> float:

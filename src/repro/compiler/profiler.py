@@ -95,7 +95,9 @@ def profile_node(g: Graph, nd: Node, pu: PUSpec) -> NodeProfile:
 
     primary = nd.inputs[0] if nd.inputs else None
     t_ld = pu.adm_seconds(g.tensors[primary].nbytes_padded) if primary is not None else 0.0
-    out_bytes = sum(g.tensors[t].nbytes_padded for t in nd.outputs)
+    # per-round store bytes: a K/V-cache producer appends one row per round
+    # (decode), everything else stores the whole tensor.
+    out_bytes = sum(g.tensors[t].write_bytes for t in nd.outputs)
     t_st = pu.adm_seconds(out_bytes) if out_bytes else 0.0
 
     # CP-issued async side streams, one ADM (with its own floor) each:

@@ -31,7 +31,7 @@ import math
 from dataclasses import dataclass, field
 
 from ..core.pu import PUSpec, URAM_BYTES
-from .graph import Graph, Node, OpType
+from .graph import Graph, OpType
 
 CHUNK_BYTES = URAM_BYTES  # one URAM per chunk
 
@@ -162,8 +162,11 @@ def schedule_weights(g: Graph, nids: list[int], pu: PUSpec) -> WeightSchedule:
             pu.gemm_seconds(nd.m, nd.n, nd.k) if (nd.m and nd.n and nd.k) else 0.0
         )
         if nd.op in _ATTN_OPS:
+            # stream_bytes is the average valid prefix for decode K/V caches
+            # (the per-round AddrLen lengths average to it over the window)
+            # and the whole tensor for prefill attention operands.
             node_stream[nid] = pu.adm_seconds(
-                g.tensors[nd.inputs[1]].nbytes_padded)
+                g.tensors[nd.inputs[1]].stream_bytes)
     sched = WeightSchedule(
         tiles=tiles,
         pu_kind=pu.kind,

@@ -15,10 +15,16 @@ and context GEMMs are ATTN_* ops whose second operand is an *activation*
 streamed through the SA weight port; layernorm / softmax / gating run in the
 PU vector units like ReLU and the pools. Embedding lookup, position adds and
 the cls token are host-side (free) and omitted.
+
+Autoregressive decode (``transformer_decoder``): one program round processes
+one new token; per-block K/V caches are append-only HBM regions
+(``TensorInfo.kv_base_rows``) whose attention streams advance in *length*
+every round (AddrLen/CYCLE_LEN) — the serving-phase counterpart of the
+prefill graphs above.
 """
 from __future__ import annotations
 
-from .graph import Graph, Node, OpType, TensorInfo
+from .graph import Graph, OpType, TensorInfo
 
 
 def _conv(g: Graph, x: TensorInfo, out_ch: int, k: int, stride: int, pad: int,
@@ -237,13 +243,10 @@ def _attention(g: Graph, x: TensorInfo, heads: int, kv_heads: int, head_dim: int
     return _proj(g, ctx, d, f"{name}.wo")
 
 
-def _encoder_block(g: Graph, x: TensorInfo, heads: int, kv_heads: int,
-                   head_dim: int, d_ff: int, mlp: str, name: str) -> TensorInfo:
-    """Pre-norm encoder block: LN -> MHA -> +res -> LN -> FFN -> +res."""
-    attn_out = _attention(g, _layernorm(g, x, f"{name}.ln1"), heads, kv_heads,
-                          head_dim, f"{name}.attn")
-    h = _token_add(g, attn_out, x, f"{name}.add1")
-
+def _ffn(g: Graph, h: TensorInfo, d_model: int, d_ff: int, mlp: str,
+         name: str) -> TensorInfo:
+    """Pre-norm FFN sub-block: LN -> (gated) MLP -> +res, shared by the
+    prefill encoder and decode blocks."""
     t = _layernorm(g, h, f"{name}.ln2")
     if mlp in ("swiglu", "geglu"):
         act = "silu" if mlp == "swiglu" else "gelu"
@@ -253,8 +256,17 @@ def _encoder_block(g: Graph, x: TensorInfo, heads: int, kv_heads: int,
         t = _mul(g, gate, up, f"{name}.ffn.mul")
     else:
         t = _vec_act(g, _proj(g, t, d_ff, f"{name}.ffn.up"), f"{name}.ffn.act")
-    down = _proj(g, t, x.shape[1], f"{name}.ffn.down")
+    down = _proj(g, t, d_model, f"{name}.ffn.down")
     return _token_add(g, down, h, f"{name}.add2")
+
+
+def _encoder_block(g: Graph, x: TensorInfo, heads: int, kv_heads: int,
+                   head_dim: int, d_ff: int, mlp: str, name: str) -> TensorInfo:
+    """Pre-norm encoder block: LN -> MHA -> +res -> LN -> FFN -> +res."""
+    attn_out = _attention(g, _layernorm(g, x, f"{name}.ln1"), heads, kv_heads,
+                          head_dim, f"{name}.attn")
+    h = _token_add(g, attn_out, x, f"{name}.add1")
+    return _ffn(g, h, x.shape[1], d_ff, mlp, name)
 
 
 def vit(input_hw: int = 224, *, patch: int = 16, d_model: int = 768,
@@ -315,6 +327,101 @@ def transformer_encoder(arch="qwen3-0.6b", *, seq_len: int = 256,
         t = _encoder_block(g, t, cfg.num_heads, cfg.num_kv_heads,
                            cfg.resolved_head_dim, cfg.d_ff, cfg.mlp,
                            f"block{i}")
+    t = _layernorm(g, t, "ln_f")
+    g.output_tensors = [t.tid]
+    g.validate_topological()
+    return g
+
+
+# ------------------------------------------------- autoregressive decode --
+def _decode_attention(g: Graph, x: TensorInfo, heads: int, kv_heads: int,
+                      head_dim: int, base_rows: int, steps: int,
+                      name: str) -> TensorInfo:
+    """Single-token self-attention against growing K/V cache regions.
+
+    One program round = one decode step. The new token's K/V rows are
+    *appended* to per-block cache regions (``kv_base_rows`` rows hold the
+    prefill prefix); the score and context GEMMs stream the cache through
+    the SA weight port with a per-round advancing length (AddrLen/CYCLE_LEN).
+    GEMM dims are *static* in the ISA, so score/context encode the decode
+    window's average cache length — the analytic model and the instruction
+    stream agree on per-round compute by construction, while the HBM traffic
+    executes the true advancing-length semantics."""
+    s, d = x.shape
+    assert s == 1, f"{name}: decode processes one token per round"
+    kv_dim = kv_heads * head_dim
+    l_max = base_rows + steps
+    n_avg = max(1, round(base_rows + (steps + 1) / 2))  # mean cache length
+    assert l_max <= 16383, f"{name}: context-GEMM K (cache len) is 14 bits"
+    assert heads * n_avg <= 65535, f"{name}: score-GEMM N is 16 bits"
+
+    q = _proj(g, x, heads * head_dim, f"{name}.wq")
+    kcache = g.add_tensor(f"{name}.kcache", (l_max, kv_dim),
+                          kv_base_rows=base_rows)
+    g.add_node(name=f"{name}.wk", op=OpType.PROJ, inputs=[x.tid],
+               outputs=[kcache.tid], m=kv_dim, n=1, k=d, scale_shift=7)
+    vcache = g.add_tensor(f"{name}.vcache", (l_max, kv_dim),
+                          kv_base_rows=base_rows)
+    g.add_node(name=f"{name}.wv", op=OpType.PROJ, inputs=[x.tid],
+               outputs=[vcache.tid], m=kv_dim, n=1, k=d, scale_shift=7)
+
+    scores = g.add_tensor(f"{name}.scores", (heads, l_max))
+    g.add_node(name=f"{name}.score", op=OpType.ATTN_SCORE,
+               inputs=[q.tid, kcache.tid], outputs=[scores.tid],
+               m=1, n=heads * n_avg, k=head_dim, scale_shift=7)
+    probs = g.add_tensor(f"{name}.probs", (heads, l_max))
+    g.add_node(name=f"{name}.softmax", op=OpType.SOFTMAX,
+               inputs=[scores.tid], outputs=[probs.tid],
+               m=1, n=heads, k=n_avg)
+    ctx = g.add_tensor(f"{name}.ctx", (1, heads * head_dim))
+    g.add_node(name=f"{name}.context", op=OpType.ATTN_CONTEXT,
+               inputs=[probs.tid, vcache.tid], outputs=[ctx.tid],
+               m=head_dim, n=heads, k=n_avg, scale_shift=7)
+    return _proj(g, ctx, d, f"{name}.wo")
+
+
+def _decoder_block(g: Graph, x: TensorInfo, heads: int, kv_heads: int,
+                   head_dim: int, d_ff: int, mlp: str, base_rows: int,
+                   steps: int, name: str) -> TensorInfo:
+    """Pre-norm decode block: LN -> cached MHA -> +res -> LN -> FFN -> +res."""
+    attn_out = _decode_attention(g, _layernorm(g, x, f"{name}.ln1"), heads,
+                                 kv_heads, head_dim, base_rows, steps,
+                                 f"{name}.attn")
+    h = _token_add(g, attn_out, x, f"{name}.add1")
+    return _ffn(g, h, x.shape[1], d_ff, mlp, name)
+
+
+def transformer_decoder(arch="qwen3-0.6b", *, seq_len: int = 256,
+                        decode_steps: int = 64,
+                        depth: int | None = None) -> Graph:
+    """The decode half of the prefill->decode serving pair: ``depth`` blocks
+    processing *one new token per program round* against per-block K/V cache
+    regions pre-filled with ``seq_len`` tokens (the matching prefill graph is
+    ``transformer_encoder(arch, seq_len=seq_len, depth=depth)`` — a running
+    :class:`repro.deploy.System` hot-swaps between the two with no
+    reconfiguration). ``decode_steps`` sizes the append-only cache window:
+    round r attends over ``seq_len + r + 1`` tokens, and deployments of this
+    graph default to ``decode_steps`` rounds (one full decode pass)."""
+    from ..configs import get_config
+
+    cfg = get_config(arch) if isinstance(arch, str) else arch
+    n_layers = depth if depth is not None else cfg.num_layers
+    assert 1 <= decode_steps <= 128, \
+        "decode window exceeds the 7-bit AddrCyc NC field (cache append side)"
+    assert seq_len + decode_steps <= 16383, \
+        "max cache length exceeds the 14-bit context-GEMM K field"
+    g = Graph(name=f"{cfg.name.replace('.', '_')}_dec{n_layers}"
+                   f"_s{seq_len}x{decode_steps}")
+    g.attrs.update(phase="decode", prefill_len=seq_len,
+                   decode_steps=decode_steps)
+    x = g.add_tensor("input", (1, cfg.d_model))
+    g.input_tensors = [x.tid]
+
+    t = x
+    for i in range(n_layers):
+        t = _decoder_block(g, t, cfg.num_heads, cfg.num_kv_heads,
+                           cfg.resolved_head_dim, cfg.d_ff, cfg.mlp,
+                           seq_len, decode_steps, f"block{i}")
     t = _layernorm(g, t, "ln_f")
     g.output_tensors = [t.tid]
     g.validate_topological()

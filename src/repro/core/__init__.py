@@ -5,6 +5,7 @@
 # TPU-scale adaptation (shard_map pipeline runtime) in repro.runtime.
 from .isa import (
     AddrCyc,
+    AddrLen,
     Compute,
     Config,
     DataMove,
@@ -22,6 +23,7 @@ from .simulator import MemberSimResult, MultiPUSimulator, PipelineMember, SimRes
 
 __all__ = [
     "AddrCyc",
+    "AddrLen",
     "Compute",
     "Config",
     "DataMove",

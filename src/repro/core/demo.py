@@ -17,7 +17,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from .isa import AddrCyc, Compute, DataMove, Opcode, ProgCtrl, Sync
+from .isa import AddrCyc, Compute, DataMove, Opcode, Sync
 from .program import Program, PUProgram
 from .isa import Group
 

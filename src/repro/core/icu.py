@@ -21,11 +21,12 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import TYPE_CHECKING, Optional
+from typing import Optional
 
 from .events import Acquire, Delay, Kernel, Release, Semaphore, WaitCond
 from .isa import (
     AddrCyc,
+    AddrLen,
     Compute,
     Config,
     DataMove,
@@ -140,16 +141,19 @@ class ICU:
             elif isinstance(inst, DataMove):
                 if group is Group.CP:
                     # Async issue: the CP ADM engines run decoupled.
+                    # length/channel snapshot at issue: a successor AddrCyc/
+                    # AddrLen rewrites the BRAM fields for the *next* round
+                    # and must not retroactively resize an in-flight transfer.
                     if op is Opcode.WEIGHTS_ADM:
                         weights_issued += 1
                         self.kernel.spawn(
-                            self._async_adm(inst, kind="weights"),
+                            self._async_adm(inst.length, inst.channel, kind="weights"),
                             name=f"pu{self.spec.pid}.wadm",
                         )
                     else:  # RES_ADD_* : residual shortcut stream
                         self.res_issued += 1
                         self.kernel.spawn(
-                            self._async_adm(inst, kind="res"),
+                            self._async_adm(inst.length, inst.channel, kind="res"),
                             name=f"pu{self.spec.pid}.radm",
                         )
                 elif group is Group.LD:
@@ -182,6 +186,13 @@ class ICU:
                 pred = insts[pc - 1]
                 assert isinstance(pred, DataMove)
                 pred.cur_ba = inst.step(pred.cur_ba)  # dynamic write-back
+
+            elif isinstance(inst, AddrLen):
+                # length-advance mode: the predecessor transfer grows per
+                # round (append-only K/V region of autoregressive decode).
+                pred = insts[pc - 1]
+                assert isinstance(pred, DataMove)
+                pred.length = inst.step(pred.length)
 
             elif isinstance(inst, Sync):
                 if inst.is_send:
@@ -256,10 +267,10 @@ class ICU:
         st.busy += dur
         yield Release(chan)
 
-    def _async_adm(self, inst: DataMove, kind: str):
-        chan = self.hbm_channels[inst.channel]
+    def _async_adm(self, length: int, channel: int, kind: str):
+        chan = self.hbm_channels[channel]
         yield Acquire(chan)
-        dur = self.spec.adm_sys_cycles(inst.length)
+        dur = self.spec.adm_sys_cycles(length)
         yield Delay(dur)
         yield Release(chan)
         if kind == "weights":

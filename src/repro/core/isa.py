@@ -8,6 +8,11 @@ Six instruction types organized into three ICU groups (Load, Compute, Store):
                               successor AddrCyc
   AddrCyc   CYCLE_ADDR     -- cyclic addressing (BA, AOFFS, NC, IC) with
                               write-back to the *predecessor* DataMove CUR_BA
+            CYCLE_LEN      -- the length-advance mode of the AddrCyc family
+                              (:class:`AddrLen`): per-round LEN counter over a
+                              cyclic append-only region (K/V caches of
+                              autoregressive decode), written back to the
+                              predecessor DataMove LEN
   Sync      SEND/WAIT_REQ/ACK -- peer-to-peer REQ/ACK coordination (BID,
                               DST/SRC_PID, BASE_BID, NC, IC) with BID cycling
   Compute   GEMM           -- systolic-array + vector ops (ReLU, scales,
@@ -22,8 +27,8 @@ into the ICU BRAM by the decoder (Table I(b) algorithms, implemented in
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass, field, replace
-from typing import ClassVar, Optional
+from dataclasses import dataclass
+from typing import ClassVar
 
 
 class Group(enum.Enum):
@@ -47,8 +52,9 @@ class Opcode(enum.IntEnum):
     WEIGHTS_ADM = 0x13
     RES_ADD_ADM = 0x14
     RES_ADD_STRIDE_ADM = 0x15
-    # AddrCyc
+    # AddrCyc family (address cycling + the length-advance mode)
     CYCLE_ADDR = 0x20
+    CYCLE_LEN = 0x21
     # Sync
     SEND_REQ = 0x28
     SEND_ACK = 0x29
@@ -70,6 +76,7 @@ GROUP_OPCODES: dict[Group, frozenset[Opcode]] = {
             Opcode.SEND_ACK,
             Opcode.WAIT_REQ,
             Opcode.CYCLE_ADDR,
+            Opcode.CYCLE_LEN,
             Opcode.PRG_PRM,
         }
     ),
@@ -81,6 +88,7 @@ GROUP_OPCODES: dict[Group, frozenset[Opcode]] = {
             Opcode.RES_ADD_STRIDE_ADM,
             Opcode.RES_ADD_ADM,
             Opcode.CYCLE_ADDR,
+            Opcode.CYCLE_LEN,
             Opcode.GEMM,
             Opcode.PRG_PRM,
         }
@@ -93,6 +101,7 @@ GROUP_OPCODES: dict[Group, frozenset[Opcode]] = {
             Opcode.SEND_REQ,
             Opcode.WAIT_ACK,
             Opcode.CYCLE_ADDR,
+            Opcode.CYCLE_LEN,
             Opcode.PRG_PRM,
         }
     ),
@@ -325,6 +334,54 @@ class AddrCyc(Instruction):
 
 
 @dataclass
+class AddrLen(Instruction):
+    """CYCLE_LEN: the length-advance mode of the AddrCyc family.
+
+        if IC == 0: IC, CUR_LEN = NC, LEN_BASE
+        else:       IC, CUR_LEN = IC-1, CUR_LEN + LOFFS
+
+    Write-back: *predecessor* DataMove.length := CUR_LEN (next round's
+    transfer length), own IC. This drives transfers over an *append-only*
+    cyclic region whose valid prefix grows every program round — the K/V
+    cache of autoregressive decode: round r of a decode window reads
+    LEN_BASE + r*LOFFS bytes, then the counter wraps for the next sequence.
+    IC initialises to NC when loaded offline, exactly like AddrCyc.
+    """
+
+    opcode: ClassVar[Opcode] = Opcode.CYCLE_LEN
+    len_base: int = 0  # bytes of the first round's transfer
+    loffs: int = 0  # bytes appended per round
+    nc: int = 0
+    ic: int = 0  # iteration counter; loaded as NC offline
+
+    @property
+    def is_static(self) -> bool:
+        return False
+
+    def step(self, pred_length: int) -> int:
+        """Advance one program round; returns the new LEN to write back into
+        the predecessor DataMove."""
+        if self.ic == 0:
+            self.ic = self.nc
+            new_len = self.len_base
+        else:
+            self.ic -= 1
+            new_len = pred_length + self.loffs
+        return new_len
+
+    def _encode_payload(self, p: _Packer) -> None:
+        p.put(_to_beats(self.len_base, "LEN_BASE", round_up=True), 22, "LEN_BASE")
+        p.put(_to_beats(self.loffs, "LOFFS", round_up=True), 17, "LOFFS")
+        p.put(self.nc, 9, "NC")
+        p.put(self.ic, 9, "IC")
+
+    @classmethod
+    def _decode_payload(cls, op: Opcode, u: _Unpacker) -> "AddrLen":
+        return cls(len_base=u.get(22) * BEAT, loffs=u.get(17) * BEAT,
+                   nc=u.get(9), ic=u.get(9))
+
+
+@dataclass
 class Sync(Instruction):
     """SEND_REQ / SEND_ACK / WAIT_REQ / WAIT_ACK (Table I(b)).
 
@@ -448,6 +505,7 @@ _DECODERS: dict[Opcode, type] = {
     Opcode.RES_ADD_ADM: DataMove,
     Opcode.RES_ADD_STRIDE_ADM: DataMove,
     Opcode.CYCLE_ADDR: AddrCyc,
+    Opcode.CYCLE_LEN: AddrLen,
     Opcode.SEND_REQ: Sync,
     Opcode.SEND_ACK: Sync,
     Opcode.WAIT_REQ: Sync,

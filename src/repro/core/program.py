@@ -13,18 +13,16 @@ from __future__ import annotations
 
 import copy
 from dataclasses import dataclass, field
-from typing import Iterator, Optional
+from typing import Iterator
 
 from .isa import (
     AddrCyc,
-    Compute,
+    AddrLen,
     Config,
     DataMove,
     Group,
     Instruction,
-    Opcode,
     ProgCtrl,
-    Sync,
     validate_group,
 )
 
@@ -83,10 +81,12 @@ class Program:
                 nxt = self.instructions[idx + 1] if idx + 1 < len(self.instructions) else None
                 if not isinstance(nxt, DataMove):
                     raise ValueError(f"Config at {idx} lacks successor DataMove")
-            if isinstance(inst, AddrCyc):
+            if isinstance(inst, (AddrCyc, AddrLen)):
                 prev = self.instructions[idx - 1] if idx > 0 else None
                 if not isinstance(prev, DataMove):
-                    raise ValueError(f"AddrCyc at {idx} lacks predecessor DataMove")
+                    raise ValueError(
+                        f"{type(inst).__name__} at {idx} lacks predecessor DataMove"
+                    )
 
     def __len__(self) -> int:
         return len(self.instructions)

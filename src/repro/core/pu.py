@@ -27,7 +27,7 @@ consistent with Shuhai [33] measurements).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 SYS_CLK_HZ = 300e6
 DSP_CLK_HZ = 600e6

@@ -22,7 +22,7 @@ loadable into :class:`repro.deploy.System`.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 from ..compiler.compile import CompiledModel, compile_model
@@ -86,12 +86,17 @@ class DeployedMember:
 
 @dataclass
 class Deployment:
-    """An executable deployment: programs + placement + analytic model."""
+    """An executable deployment: programs + placement + analytic model.
+
+    ``rounds`` is the explicit deployment-wide loop-count request, ``None``
+    when per-member defaults applied (Workload.rounds / decode window /
+    ``DEFAULT_ROUNDS``) — the actually-compiled count of each member is its
+    programs' ProgCtrl NR field."""
 
     strategy: Strategy
     members: list[DeployedMember]
     pus: list[PUSpec]
-    rounds: int
+    rounds: Optional[int]
 
     @property
     def name(self) -> str:
@@ -185,25 +190,34 @@ class Deployment:
             chans |= set(m.channels)
 
 
+DEFAULT_ROUNDS = 16
+
+
 def compile_deployment(
-    g: Optional[Graph],
+    g: "Optional[Graph | Workload]",
     strategy,
     *,
     pus: Optional[list[PUSpec]] = None,
-    rounds: int = 16,
+    rounds: Optional[int] = None,
     n_io: int = 4,
     n_channels: int = N_HBM_CHANNELS,
 ) -> Deployment:
     """Compile any schedule-like ``strategy`` (see :meth:`Strategy.of`) into
     an executable deployment.
 
-    ``g`` is broadcast onto every member that does not already carry its own
-    :class:`Workload`; pass ``g=None`` for a fully multi-tenant strategy
-    (every member workload-bound). Each member pipeline is compiled by the
+    ``g`` (a Graph or a :class:`Workload`) is broadcast onto every member
+    that does not already carry its own :class:`Workload`; pass ``g=None``
+    for a fully multi-tenant strategy (every member workload-bound). Each member pipeline is compiled by the
     single-pipeline framework — against its own graph — on a disjoint PU
     subset and HBM channel pool; the partitioning that previously had to be
     hand-wired through ``compile_model(pid_offset=..., channel_pool=...)``
-    happens here."""
+    happens here.
+
+    Per-member loop count, in precedence order: the member's explicit
+    ``Workload.rounds``; an explicit ``rounds`` argument here; one full
+    decode window for decode-phase graphs (``graph.decode_steps`` — one
+    program round is one token, so a decode tenant runs a complete
+    advancing-length pass per measurement); ``DEFAULT_ROUNDS``."""
     strategy = Strategy.of(strategy).with_workload(g)
     unbound = [i for i, m in enumerate(strategy.members) if m.workload is None]
     if unbound:
@@ -217,12 +231,18 @@ def compile_deployment(
     members: list[DeployedMember] = []
     for member, res in zip(strategy.members, placement):
         workload = member.workload
+        if workload.rounds is not None:
+            member_rounds = workload.rounds
+        elif rounds is not None:
+            member_rounds = rounds
+        else:
+            member_rounds = workload.graph.decode_steps or DEFAULT_ROUNDS
         cm = compile_model(
             workload.graph,
             member.a,
             member.b,
             pus=pus,
-            rounds=workload.rounds if workload.rounds is not None else rounds,
+            rounds=member_rounds,
             n_io=n_io,
             pid_offset=res.pid_offset if strategy.batch > 1 else None,
             channel_pool=list(res.channel_pool) if strategy.batch > 1 else None,

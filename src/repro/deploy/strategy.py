@@ -33,9 +33,13 @@ class Workload:
 
     ``rounds`` optionally overrides the deployment-wide per-round loop count
     for members running this workload (e.g. a latency-critical tenant running
-    fewer rounds per measurement window than a batch tenant). ``label`` keys
-    per-member accounting in :class:`repro.core.simulator.MemberSimResult`;
-    it defaults to the graph name.
+    fewer rounds per measurement window than a batch tenant); it always wins
+    over the ``rounds`` given to ``compile_deployment``. When neither is
+    set, a decode-phase graph (``graph.decode_steps``) defaults to one full
+    decode window — see :func:`repro.deploy.compile_deployment`. ``label``
+    keys per-member accounting in
+    :class:`repro.core.simulator.MemberSimResult`; it defaults to the graph
+    name.
     """
 
     graph: Graph

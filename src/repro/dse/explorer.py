@@ -21,7 +21,6 @@ on the paper's fixed PU array.
 """
 from __future__ import annotations
 
-import itertools
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -175,24 +174,29 @@ class DSEResult:
     multi: list[MultiBatchSchedule]
     single_frontier: list[SingleBatchPoint]
     multi_frontier: list[MultiBatchSchedule]
-    # deployment context: what was explored, on which machine
+    # deployment context: what was explored, on which machine — ``workload``
+    # preserves an explored Workload's label/rounds overrides for deploys
     graph: Optional[Graph] = None
     pus: Optional[list[PUSpec]] = None
+    workload: "Optional[object]" = None  # repro.deploy.Workload when given
     validation: list[ValidationRecord] = field(default_factory=list)
 
-    def deploy(self, point_or_schedule, *, rounds: int = 16):
+    def deploy(self, point_or_schedule, *, rounds: Optional[int] = None):
         """Compile any Step-1 point / Step-2 schedule (or raw config tuple)
         of this exploration into an executable Deployment — every DSE design
-        point is one call away from the simulator."""
+        point is one call away from the simulator. ``rounds=None`` keeps the
+        per-workload default (explicit Workload.rounds, else one full decode
+        window for decode graphs, else 16)."""
         if self.graph is None:
             raise ValueError("this DSEResult carries no graph to deploy")
         from ..deploy import Strategy, compile_deployment
 
         return compile_deployment(
-            self.graph, Strategy.of(point_or_schedule), pus=self.pus, rounds=rounds
+            self.workload if self.workload is not None else self.graph,
+            Strategy.of(point_or_schedule), pus=self.pus, rounds=rounds
         )
 
-    def simulate(self, point_or_schedule, *, rounds: int = 5):
+    def simulate(self, point_or_schedule, *, rounds: Optional[int] = None):
         """Deploy + execute on a fresh fixed system; returns the SimResult."""
         from ..deploy import System
 
@@ -317,16 +321,18 @@ class MultiDSEResult:
             name=str(point),
         )
 
-    def deploy(self, point: MultiTenantPoint, *, rounds: int = 16):
+    def deploy(self, point: MultiTenantPoint, *, rounds: Optional[int] = None):
         """Compile the joint placement into an executable multi-tenant
         Deployment — every co-exploration point is one call away from the
-        simulator, exactly like single-model DSE points."""
+        simulator, exactly like single-model DSE points. ``rounds=None``
+        keeps each tenant's own default (Workload.rounds, else one full
+        decode window for decode tenants, else 16)."""
         from ..deploy import compile_deployment
 
         return compile_deployment(None, self.strategy(point), pus=self.pus,
                                   rounds=rounds)
 
-    def simulate(self, point: MultiTenantPoint, *, rounds: int = 5):
+    def simulate(self, point: MultiTenantPoint, *, rounds: Optional[int] = None):
         from ..deploy import System
 
         dep = self.deploy(point, rounds=rounds)
@@ -347,7 +353,11 @@ def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
     ``validate=N`` deploys + simulates up to N joint placements (the
     max-min-fair ``balanced`` point first, then the frontier by normalized
     rate product) and cross-checks each tenant's simulated rate against its
-    own analytic model in ``MultiDSEResult.validation``."""
+    own analytic model in ``MultiDSEResult.validation``. When any tenant
+    carries its own round semantics (explicit ``Workload.rounds`` or a
+    decode window), validation keeps the per-member defaults instead of
+    forcing ``validate_rounds``, so decode tenants are cross-checked over
+    their full advancing-length cycle."""
     from ..deploy import Workload
 
     workloads = tuple(Workload.of(g) for g in graphs)
@@ -400,6 +410,12 @@ def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
     res = MultiDSEResult(workloads=workloads, singles=singles, points=points,
                          frontier=frontier, pus=pus)
     if validate > 0:
+        # tenants with their own round semantics (explicit Workload.rounds
+        # or a decode window) validate on per-member defaults, so decode
+        # rates are measured over the full advancing-length cycle.
+        has_own_rounds = any(
+            w.rounds is not None or w.graph.decode_steps for w in workloads)
+        val_rounds = None if has_own_rounds else validate_rounds
         norm = [res.best_solo_fps(i) for i in range(res.n_tenants)]
         candidates = [res.balanced]
         ranked = sorted(
@@ -413,7 +429,7 @@ def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
                 candidates.append(p)
                 seen.add(p.configs)
         for cand in candidates[:validate]:
-            sim = res.simulate(cand, rounds=validate_rounds)
+            sim = res.simulate(cand, rounds=val_rounds)
             res.validation.append(
                 MultiTenantValidationRecord(
                     configs=cand.configs,
@@ -425,14 +441,27 @@ def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
     return res
 
 
-def explore(g: Graph, *, n_pu1x: int = 5, n_pu2x: int = 5,
+def explore(g, *, n_pu1x: int = 5, n_pu2x: int = 5,
             tolerance: float = 0.0, pus: Optional[list[PUSpec]] = None,
             validate: int = 0, validate_rounds: int = 5) -> DSEResult:
     """Run the three DSE steps; optionally cross-check the analytic cache.
 
-    ``validate=N`` deploys + simulates up to N schedules (the design points
-    DP-A/C/B first, then the throughput-ordered multi-batch frontier) and
-    records analytic-vs-simulated throughput in ``DSEResult.validation``."""
+    ``g`` is a Graph or a deploy ``Workload`` — any frontend graph flows
+    through unchanged, including decode-phase graphs
+    (``zoo.transformer_decoder``) whose K/V-cache scheduling is entirely a
+    compiler/ISA concern: a decode tenant enumerates, composes and deploys
+    exactly like a prefill or CNN tenant. ``validate=N`` deploys + simulates
+    up to N schedules (the design points DP-A/C/B first, then the
+    throughput-ordered multi-batch frontier) and records
+    analytic-vs-simulated throughput in ``DSEResult.validation``; decode
+    workloads validate over one full decode window (not ``validate_rounds``)
+    so the cross-check covers the whole advancing-length cycle."""
+    workload = None
+    if not isinstance(g, Graph):
+        from ..deploy import Workload
+
+        workload = Workload.of(g)
+        g = workload.graph
     pus = pus if pus is not None else make_u50_system()
     single, _ = enumerate_single_batch(g, n_pu1x=n_pu1x, n_pu2x=n_pu2x, pus=pus)
     multi = enumerate_multi_batch(single, n_pu1x=n_pu1x, n_pu2x=n_pu2x)
@@ -443,8 +472,13 @@ def explore(g: Graph, *, n_pu1x: int = 5, n_pu2x: int = 5,
         multi, [lambda s: s.throughput, lambda s: -s.latency], tolerance=tolerance
     )
     res = DSEResult(single=single, multi=multi, single_frontier=sf,
-                    multi_frontier=mf, graph=g, pus=pus)
+                    multi_frontier=mf, graph=g, pus=pus, workload=workload)
     if validate > 0:
+        # decode workloads (or explicit Workload.rounds) validate over their
+        # own full window; everything else uses the quick validate_rounds.
+        has_own_rounds = (workload is not None and workload.rounds is not None
+                          ) or bool(g.decode_steps)
+        val_rounds = None if has_own_rounds else validate_rounds
         candidates: list = []
         for dp in ("dp_a", "dp_c", "dp_b"):
             try:
@@ -457,7 +491,7 @@ def explore(g: Graph, *, n_pu1x: int = 5, n_pu2x: int = 5,
                 candidates.append(s)
                 seen.add(s.configs)
         for cand in candidates[:validate]:
-            sim = res.simulate(cand, rounds=validate_rounds)
+            sim = res.simulate(cand, rounds=val_rounds)
             res.validation.append(
                 ValidationRecord(
                     configs=cand.configs,

@@ -18,7 +18,6 @@ import json
 import time
 import traceback
 from dataclasses import asdict, dataclass, field
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

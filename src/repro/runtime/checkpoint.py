@@ -15,7 +15,6 @@ import json
 import os
 import shutil
 import tempfile
-from dataclasses import dataclass
 from typing import Any, Optional
 
 import jax

@@ -10,7 +10,7 @@ per-host shards in a real deployment).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Iterator, Optional
 
 import jax

@@ -8,10 +8,8 @@ sharding (ZeRO-style when FSDP is active — moments shard over data x model).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -20,8 +20,8 @@ Placement rules (chosen per arch by divisibility and size — DESIGN.md §5):
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
-from typing import Any, Optional
+from dataclasses import dataclass
+from typing import Any
 
 import jax
 import numpy as np

@@ -5,8 +5,6 @@ accumulation loop).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from functools import partial
 from typing import Any, Optional
 
 import jax

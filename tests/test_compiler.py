@@ -1,7 +1,6 @@
 """Compilation framework tests (paper Sec. IV): fusion, DP partitioning,
 SMOF weight scheduling, stage-distance buffers, liveness channel assignment,
 instruction generation, and end-to-end compile->simulate consistency."""
-import math
 
 import pytest
 
@@ -16,8 +15,8 @@ from repro.compiler import (
     zoo,
 )
 from repro.compiler.graph import OpType
-from repro.core import Group, simulate
-from repro.core.pu import PUSpec, make_u50_system
+from repro.core import simulate
+from repro.core.pu import make_u50_system
 
 PUS = make_u50_system()
 PU1X = PUS[0]
@@ -204,6 +203,158 @@ class TestTransformerFrontend:
                        last_pid=cm.pid_map[used[-1].index])
         assert not res.deadlocked
         assert cm.pbe() > 0.7
+
+
+# ----------------------------------------------------------------- decode --
+class TestDecodeFrontend:
+    """Autoregressive decode: K/V caches as append-only regions, attention
+    GEMMs streaming a per-round *growing* operand (AddrLen/CYCLE_LEN)."""
+
+    SEQ, STEPS, DEPTH = 64, 8, 2
+
+    def _graph(self):
+        return zoo.transformer_decoder("qwen3-0.6b", seq_len=self.SEQ,
+                                       decode_steps=self.STEPS,
+                                       depth=self.DEPTH)
+
+    def test_decoder_shapes_parameterized_from_configs(self):
+        from repro.configs import get_config
+
+        cfg = get_config("qwen3-0.6b")
+        g = self._graph()
+        assert g.decode_steps == self.STEPS
+        score = [n for n in g.nodes if n.op is OpType.ATTN_SCORE]
+        assert len(score) == self.DEPTH
+        n_avg = round(self.SEQ + (self.STEPS + 1) / 2)
+        assert all(n.m == 1 and n.k == cfg.resolved_head_dim for n in score)
+        assert all(n.n == cfg.num_heads * n_avg for n in score)
+        ctxg = [n for n in g.nodes if n.op is OpType.ATTN_CONTEXT]
+        assert all(n.m == cfg.resolved_head_dim and n.k == n_avg for n in ctxg)
+        # K/V caches: GQA-sized rows, prefill prefix + decode window rows
+        kv_dim = cfg.num_kv_heads * cfg.resolved_head_dim
+        caches = [t for t in g.tensors.values() if t.is_kv_cache]
+        assert len(caches) == 2 * self.DEPTH
+        for t in caches:
+            assert t.shape == (self.SEQ + self.STEPS, kv_dim)
+            assert t.kv_base_rows == self.SEQ
+            assert t.kv_steps == self.STEPS
+
+    def test_kv_cache_plans_are_single_appendonly_regions(self):
+        f = fuse(self._graph())
+        prof = profile_graph(f, KINDS)
+        p = partition(f, prof, 2, 2)
+        plans = buffer_requirements(f, p, n_io=4)
+        kv = [pl for pl in plans.values() if pl.kind == "kv"]
+        assert len(kv) == 2 * self.DEPTH
+        for pl in kv:
+            tinfo = f.tensors[pl.tid]
+            assert pl.n_regions == 1  # append-only: one region, beta credits
+            assert pl.region_bytes == tinfo.kv_region_bytes
+            assert pl.beta >= 1
+
+    def test_codegen_emits_advancing_length_streams(self):
+        from repro.core.isa import AddrCyc, AddrLen, DataMove, Opcode
+
+        cm = compile_model(self._graph(), 1, 0, rounds=3)
+        (prog,) = cm.programs
+        # attention operands: WEIGHTS_ADM + AddrLen, lengths over the window
+        addrlens = [(prog.cp.instructions[i - 1], inst)
+                    for i, inst in enumerate(prog.cp.instructions)
+                    if isinstance(inst, AddrLen)]
+        assert len(addrlens) == 2 * self.DEPTH
+        row = 1024  # kv_heads * head_dim bytes, beat-aligned
+        for adm, al in addrlens:
+            assert isinstance(adm, DataMove) and adm.op is Opcode.WEIGHTS_ADM
+            assert adm.length == al.len_base == (self.SEQ + 1) * row
+            assert al.loffs == row
+            assert al.nc == al.ic == self.STEPS - 1
+        # cache appends: one row per round, address advancing past the prefix
+        appends = [(prog.st.instructions[i - 1], inst)
+                   for i, inst in enumerate(prog.st.instructions)
+                   if isinstance(inst, AddrCyc) and inst.aoffs == row]
+        assert len(appends) == 2 * self.DEPTH
+        for adm, ac in appends:
+            assert adm.length == row
+            assert ac.nc == self.STEPS - 1
+            assert adm.cur_ba == ac.ba  # starts at base + prefix rows
+
+    def test_simulator_executes_advancing_lengths(self):
+        """After r rounds the patched WEIGHTS_ADM length is the round-r cache
+        prefix; after a full window it wraps back to the base length."""
+        from repro.core.isa import AddrLen, DataMove, Opcode
+        from repro.core.simulator import MultiPUSimulator
+
+        cm = compile_model(self._graph(), 0, 1, rounds=self.STEPS - 2)
+        sim = MultiPUSimulator()
+        res = sim.run(cm.programs)
+        assert not res.deadlocked
+        icu = sim.icus[cm.programs[0].pid]
+        insts = icu.program.cp.instructions
+        row = 1024
+        checked = 0
+        for i, inst in enumerate(insts):
+            if isinstance(inst, AddrLen):
+                adm = insts[i - 1]
+                assert isinstance(adm, DataMove) and adm.op is Opcode.WEIGHTS_ADM
+                # stepped (STEPS-2) times from ic=NC: length sits at round
+                # index STEPS-2 of the window
+                assert adm.length == inst.len_base + (self.STEPS - 2) * row
+                checked += 1
+        assert checked == 2 * self.DEPTH
+
+    def test_decode_compile_simulate_consistency(self):
+        g = self._graph()
+        cm = compile_model(g, 2, 2, rounds=self.STEPS)
+        for prog in cm.programs:
+            prog.validate()
+        last = max(s.index for s in cm.part.stages if s.nids)
+        res = simulate(cm.programs, first_pid=cm.pid_map[0],
+                       last_pid=cm.pid_map[last])
+        assert not res.deadlocked
+        assert res.rounds == self.STEPS
+        assert res.throughput_fps(warmup=2) == pytest.approx(
+            cm.predicted_fps, rel=0.10)
+
+    def test_decode_attention_macs_track_average_cache(self):
+        """Per-round attention MACs equal H*hd*avg_len for score and context
+        (the step-dependent work averaged over the decode window)."""
+        from repro.configs import get_config
+
+        cfg = get_config("qwen3-0.6b")
+        g = self._graph()
+        n_avg = round(self.SEQ + (self.STEPS + 1) / 2)
+        expect = cfg.num_heads * cfg.resolved_head_dim * n_avg
+        for nd in g.nodes:
+            if nd.op in (OpType.ATTN_SCORE, OpType.ATTN_CONTEXT):
+                assert nd.macs == expect
+                assert nd.weight_bytes == 0
+
+    def test_kv_cache_cannot_be_graph_io(self):
+        """A K/V cache uses single-region append-only addressing; host
+        A/C-region cycling (graph inputs/outputs) is incompatible and must
+        be rejected at planning time, not silently misallocated."""
+        from repro.compiler.graph import Graph
+        from repro.compiler.partition import Partition, Stage
+
+        g = Graph(name="bad_kv_io")
+        x = g.add_tensor("input", (1, 64))
+        g.input_tensors = [x.tid]
+        cache = g.add_tensor("cache", (72, 64), kv_base_rows=64)
+        nd = g.add_node(name="wk", op=OpType.PROJ, inputs=[x.tid],
+                        outputs=[cache.tid], m=64, n=1, k=64)
+        g.output_tensors = [cache.tid]
+        p = Partition(stages=[Stage(0, "PU1x", (nd.nid,), 1.0)],
+                      node_order=[nd.nid])
+        with pytest.raises(ValueError, match="graph input/output"):
+            buffer_requirements(g, p)
+
+    def test_decode_window_limits_enforced(self):
+        with pytest.raises(AssertionError):
+            zoo.transformer_decoder("qwen3-0.6b", seq_len=64,
+                                    decode_steps=129, depth=1)
+        with pytest.raises(AssertionError):
+            zoo.transformer_decoder("qwen3-0.6b", seq_len=16300,
+                                    decode_steps=128, depth=1)
 
 
 # --------------------------------------------------------------- partition --

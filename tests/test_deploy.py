@@ -386,6 +386,87 @@ class TestConformance:
             dep_c.predicted_throughput, rel=tol_c)
 
 
+class TestDecodeServing:
+    """Decode-phase workloads through the unchanged DSE/deploy stack
+    (acceptance): explore produces DP-A/B/C deployments that simulate within
+    10% of the analytic model, and a running System hot-swaps a prefill
+    deployment to a decode deployment with no reconfiguration. One decode
+    round = one token; deployments default to one full decode window."""
+
+    SEQ, STEPS, DEPTH = 64, 8, 4
+
+    @pytest.fixture(scope="class")
+    def dec_graph(self):
+        return zoo.transformer_decoder("qwen3-0.6b", seq_len=self.SEQ,
+                                       decode_steps=self.STEPS,
+                                       depth=self.DEPTH)
+
+    @pytest.fixture(scope="class")
+    def dec_dse(self, dec_graph):
+        return explore(dec_graph)
+
+    def test_deployment_rounds_default_to_decode_window(self, dec_graph):
+        """Precedence: explicit Workload.rounds > explicit rounds= > decode
+        window > DEFAULT_ROUNDS — a graph-derived default never overrides an
+        explicit argument."""
+        from repro.deploy.deployment import DEFAULT_ROUNDS
+
+        dep = compile_deployment(dec_graph, (1, 1))
+        assert all(p.ld.progctrl.nr == self.STEPS for p in dep.programs())
+        dep = compile_deployment(dec_graph, (1, 1), rounds=3)  # explicit wins
+        assert all(p.ld.progctrl.nr == 3 for p in dep.programs())
+        w = Workload(dec_graph, rounds=2)  # workload rounds beat everything
+        dep = compile_deployment(w, (1, 1), rounds=3)
+        assert all(p.ld.progctrl.nr == 2 for p in dep.programs())
+        dep = compile_deployment(zoo.tiny_cnn(), (1, 1))  # non-decode default
+        assert all(p.ld.progctrl.nr == DEFAULT_ROUNDS for p in dep.programs())
+
+    @pytest.mark.parametrize("dp_name", ["dp_a", "dp_b"])
+    def test_design_points_within_10pct(self, dec_dse, dp_name):
+        dep = dec_dse.deploy(getattr(dec_dse, dp_name))
+        sim = System().load(dep).run()
+        assert not sim.deadlocked
+        assert all(m.rounds == self.STEPS for m in sim.members)
+        assert sim.aggregate_fps(warmup=2) == pytest.approx(
+            dep.predicted_throughput, rel=0.10)
+
+    def test_dp_c_within_10pct(self):
+        """DP-C (one PU per member) on the reduced config — single-PU members
+        sidestep the known deep-pipeline coupling gap and the tiny weights
+        keep the 10-member simulation fast."""
+        from repro.configs import get_config
+
+        g = zoo.transformer_decoder(get_config("qwen3-0.6b").reduced(),
+                                    seq_len=self.SEQ, decode_steps=self.STEPS,
+                                    depth=self.DEPTH)
+        dep = compile_deployment(g, [(1, 0)] * 5 + [(0, 1)] * 5)
+        dep.assert_disjoint()
+        sim = System().load(dep).run()
+        assert not sim.deadlocked
+        assert len(sim.members) == 10
+        assert sim.aggregate_fps(warmup=2) == pytest.approx(
+            dep.predicted_throughput, rel=0.10)
+
+    def test_prefill_to_decode_hot_swap(self, dec_dse):
+        """Acceptance: prefill tenant -> decode tenant on one fixed machine,
+        new instruction programs only, bit-identical to a fresh load."""
+        prefill = zoo.transformer_encoder("qwen3-0.6b", seq_len=self.SEQ,
+                                          depth=self.DEPTH)
+        dep_pre = compile_deployment(prefill, (2, 2), rounds=4)
+        dep_dec = dec_dse.deploy(dec_dse.dp_a)
+
+        system = System()
+        sim_pre = system.load(dep_pre).run()
+        assert not sim_pre.deadlocked
+        swapped = system.switch(dep_dec).run()
+        fresh = System().load(dep_dec).run()
+        assert not swapped.deadlocked
+        assert swapped.round_end_cycles == fresh.round_end_cycles
+        assert swapped.aggregate_fps(warmup=2) == pytest.approx(
+            fresh.aggregate_fps(warmup=2), rel=1e-12)
+        assert len(system.history) == 2
+
+
 class TestDSEIntegration:
     def test_every_frontier_point_is_deployable(self, dse):
         """Any Step-2 schedule is one call away from an executable form."""

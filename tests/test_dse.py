@@ -5,11 +5,8 @@ import pytest
 from repro.compiler import zoo
 from repro.dse import (
     constrained,
-    enumerate_multi_batch,
-    enumerate_single_batch,
     explore,
     explore_multi,
-    pareto_front,
 )
 
 

@@ -24,6 +24,7 @@ from repro.compiler import compile_model, zoo
 from repro.core.isa import (
     BEAT,
     AddrCyc,
+    AddrLen,
     Compute,
     Config,
     DataMove,
@@ -33,7 +34,7 @@ from repro.core.isa import (
     ProgCtrl,
     Sync,
 )
-from repro.core.program import Program, PUProgram
+from repro.core.program import Program
 
 CONFIG_OPS = [Opcode.IM2COL_PRM, Opcode.STRIDE_PRM, Opcode.URAM_PRM,
               Opcode.RES_ADD_STRIDE_PRM]
@@ -55,6 +56,10 @@ def _example_instructions():
         ProgCtrl(nr=_bits(24), icu_ba=_bits(12), prg_end=True),
         AddrCyc(ba=0, aoffs=0, nc=0, ic=0),
         AddrCyc(ba=_bits(26) * BEAT, aoffs=_bits(17) * BEAT, nc=_bits(7), ic=_bits(7)),
+        AddrLen(len_base=0, loffs=0, nc=0, ic=0),
+        AddrLen(len_base=_bits(22) * BEAT, loffs=_bits(17) * BEAT,
+                nc=_bits(9), ic=_bits(9), prg_end=True),
+        AddrLen(len_base=65 * BEAT, loffs=16 * BEAT, nc=63, ic=63),
         Compute(m=0, n=0, k=0),
         Compute(m=_bits(12), n=_bits(16), k=_bits(14), relu=True, add_enable=True,
                 scale_shift=_bits(5), rounds=1, wchunks=_bits(7), prg_end=True),
@@ -104,6 +109,10 @@ if HAVE_HYPOTHESIS:
                           nc=st.integers(0, _bits(7)),
                           ic=st.integers(0, _bits(7)),
                           prg_end=st.booleans())
+    addrlen_s = st.builds(AddrLen, len_base=beats(22), loffs=beats(17),
+                          nc=st.integers(0, _bits(9)),
+                          ic=st.integers(0, _bits(9)),
+                          prg_end=st.booleans())
     sync_s = st.builds(Sync, op=st.sampled_from(SYNC_OPS),
                        pid=st.integers(0, _bits(6)),
                        bid=st.integers(0, _bits(12)),
@@ -120,7 +129,7 @@ if HAVE_HYPOTHESIS:
                           wchunks=st.integers(0, _bits(7)),
                           prg_end=st.booleans())
     instruction_s = st.one_of(progctrl_s, config_s, datamove_s, addrcyc_s,
-                              sync_s, compute_s)
+                              addrlen_s, sync_s, compute_s)
 
     @given(instruction_s)
     def test_roundtrip_property(inst):
@@ -156,6 +165,22 @@ if HAVE_HYPOTHESIS:
             seen.append(cur)
         assert seen == [inst.ba + i * inst.aoffs for i in range(inst.nc + 1)]
 
+    @given(addrlen_s, beats(22))
+    def test_addrlen_lengths_advance_then_wrap(inst, pred_len):
+        """Length-advance mode (decode K/V caches): a full NC+1 cycle from
+        reset yields LEN_BASE, LEN_BASE+LOFFS, ..., LEN_BASE+NC*LOFFS — the
+        growing valid prefix of the cache region — and the *next* cycle
+        repeats the identical sequence (new sequence, cache rewound)."""
+        inst.ic = 0  # force reset on the first step
+        cur = pred_len
+        for _ in range(2):  # two full decode windows
+            seen = []
+            for _ in range(inst.nc + 1):
+                cur = inst.step(cur)
+                seen.append(cur)
+            assert seen == [inst.len_base + i * inst.loffs
+                            for i in range(inst.nc + 1)]
+
     @settings(deadline=None)
     @given(st.lists(compute_s, min_size=0, max_size=8))
     def test_cp_program_image_roundtrip(body):
@@ -177,6 +202,8 @@ def _zoo_graphs():
         zoo.resnet50(64),
         zoo.vit(64, depth=2, d_model=192, heads=3, d_ff=384),
         zoo.transformer_encoder("qwen3-0.6b", seq_len=64, depth=2),
+        zoo.transformer_decoder("qwen3-0.6b", seq_len=64, decode_steps=8,
+                                depth=2),
     ]
 
 

@@ -25,7 +25,7 @@ from repro.core.isa import (
     Sync,
     validate_group,
 )
-from repro.core.program import Program, PUProgram
+from repro.core.program import Program
 
 
 # ---------------------------------------------------------------- encoding --

@@ -65,7 +65,6 @@ class TestPolicyRules:
     def test_big_models_fit_per_chip(self, arch):
         """bf16 params sharded over the 256-chip pod must fit 16 GB/chip."""
         from repro.launch import specs as lspecs
-        import numpy as np
 
         policy = self._policy(arch)
         p = lspecs.params_specs(get_config(arch))

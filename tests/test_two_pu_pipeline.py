@@ -11,7 +11,7 @@ import pytest
 
 from repro.core import Group, MultiPUSimulator
 from repro.core.demo import GemmShape, build_two_pu_pipeline
-from repro.core.isu import latency_matrix, token_latency_cycles
+from repro.core.isu import latency_matrix
 from repro.core.pu import make_u50_system
 
 ROUNDS = 12
