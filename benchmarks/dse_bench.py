@@ -1,0 +1,164 @@
+"""Fast-DSE engine benchmark: wall-clock + phase-call counts, fast vs brute.
+
+Measures the three-step DSE (Sec. V-A) on the workloads the repo's quickstarts
+lead with — ``explore(zoo.resnet50(256))``, ``explore(zoo.vit(224))``,
+``explore_multi([resnet50, vit])`` and a qwen3 decode ``explore`` — once with
+the default fast engine (config-independent ``analyze`` shared across all
+Step-1 configs, lazy codegen, pruned Step-2 composition, O(n log n) Pareto)
+and once with ``engine="reference"`` (the pre-caching engine: full recompile
+including eager instruction codegen per config, unpruned composition, O(n²)
+Pareto). For every case it records:
+
+  * wall-clock seconds for both engines and the speedup,
+  * the ``repro.compiler.STATS`` phase-call counters for both engines
+    (fuse/profile/weight-schedule/partition/memory-plan/codegen calls),
+  * an equivalence bit: frontiers and DP-A/B/C (or the joint frontier and
+    the ``balanced`` point) compare equal between the engines.
+
+The JSON artifact (``BENCH_dse.json``) seeds the perf trajectory; CI runs
+``--ci`` (reduced model sizes) and **gates on the call counts and the
+equivalence bit** — zero codegen during exploration, exactly one analysis
+per distinct graph — while wall-clock numbers stay advisory so runner jitter
+cannot flake the build::
+
+    PYTHONPATH=src python benchmarks/dse_bench.py --ci --out BENCH_dse.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.compiler import STATS, clear_analysis_cache, zoo
+from repro.dse import explore, explore_multi
+
+
+def _timed(fn):
+    clear_analysis_cache()
+    STATS.reset()
+    t0 = time.perf_counter()
+    res = fn()
+    wall = time.perf_counter() - t0
+    return res, wall, STATS.snapshot()
+
+
+def _single_case(name: str, graph_fn, n_graphs: int = 1) -> dict:
+    g = graph_fn()
+    fast, t_fast, c_fast = _timed(lambda: explore(g))
+    ref, t_ref, c_ref = _timed(lambda: explore(g, engine="reference"))
+    equal = (
+        fast.single == ref.single
+        and fast.single_frontier == ref.single_frontier
+        and fast.multi_frontier == ref.multi_frontier
+        and fast.dp_a == ref.dp_a
+        and fast.dp_b == ref.dp_b
+        and fast.dp_c == ref.dp_c
+    )
+    return _report(name, n_graphs, t_fast, c_fast, t_ref, c_ref, equal,
+                   extra={"n_single": len(fast.single),
+                          "n_multi_fast": len(fast.multi),
+                          "n_multi_ref": len(ref.multi)})
+
+
+def _multi_case(name: str, graphs_fn, n_graphs: int) -> dict:
+    graphs = graphs_fn()
+    fast, t_fast, c_fast = _timed(lambda: explore_multi(graphs))
+    ref, t_ref, c_ref = _timed(lambda: explore_multi(graphs, engine="reference"))
+    equal = fast.frontier == ref.frontier and fast.balanced == ref.balanced
+    return _report(name, n_graphs, t_fast, c_fast, t_ref, c_ref, equal,
+                   extra={"n_points_fast": len(fast.points),
+                          "n_points_ref": len(ref.points),
+                          "n_frontier": len(fast.frontier)})
+
+
+def _report(name, n_graphs, t_fast, c_fast, t_ref, c_ref, equal, extra) -> dict:
+    return {
+        "name": name,
+        "wall_fast_s": t_fast,
+        "wall_ref_s": t_ref,
+        "speedup": t_ref / t_fast if t_fast else float("inf"),
+        "counts_fast": c_fast,
+        "counts_ref": c_ref,
+        "equal": equal,
+        # the CI gates: the fast engine generated zero instructions and ran
+        # one analysis (fuse+profile) per distinct graph; the reference
+        # engine shows what was saved.
+        "gate_zero_codegen": c_fast["codegen_calls"] == 0
+        and c_fast["memory_plan_calls"] == 0,
+        "gate_one_analysis_per_graph": c_fast["analysis_misses"] == n_graphs
+        and c_fast["fuse_calls"] == n_graphs
+        and c_fast["profile_calls"] == n_graphs,
+        "gate_equal": equal,
+        **extra,
+    }
+
+
+def full_cases() -> list[dict]:
+    return [
+        _single_case("explore.resnet50_256", lambda: zoo.resnet50(256)),
+        _single_case("explore.vit_224", lambda: zoo.vit(224)),
+        _multi_case("explore_multi.resnet50+vit",
+                    lambda: [zoo.resnet50(256), zoo.vit(224)], n_graphs=2),
+        _single_case(
+            "explore.qwen3_decode_s256_t64",
+            lambda: zoo.transformer_decoder("qwen3-0.6b", seq_len=256,
+                                            decode_steps=64, depth=4)),
+    ]
+
+
+def ci_cases() -> list[dict]:
+    """Reduced sizes (same frontends, same gates) so the CI step stays in
+    seconds: the call-count gates are size-independent."""
+    return [
+        _single_case("explore.tiny_cnn",
+                     lambda: zoo.tiny_cnn(channels=(16, 32, 32), hw=16)),
+        _single_case(
+            "explore.qwen3_enc1_s64",
+            lambda: zoo.transformer_encoder("qwen3-0.6b", seq_len=64, depth=1)),
+        _single_case(
+            "explore.qwen3_dec_s64_t8",
+            lambda: zoo.transformer_decoder("qwen3-0.6b", seq_len=64,
+                                            decode_steps=8, depth=4)),
+        _multi_case(
+            "explore_multi.tiny_cnn+qwen3_enc",
+            lambda: [zoo.tiny_cnn(channels=(16, 32, 32), hw=16),
+                     zoo.transformer_encoder("qwen3-0.6b", seq_len=64, depth=1)],
+            n_graphs=2),
+    ]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ci", action="store_true",
+                    help="reduced sizes; exit nonzero on call-count or "
+                         "equivalence gate failures (wall-clock advisory)")
+    ap.add_argument("--out", default="BENCH_dse.json",
+                    help="artifact path")
+    args = ap.parse_args()
+
+    cases = ci_cases() if args.ci else full_cases()
+    ok = all(c["gate_zero_codegen"] and c["gate_one_analysis_per_graph"]
+             and c["gate_equal"] for c in cases)
+    report = {
+        "mode": "ci" if args.ci else "full",
+        "cases": cases,
+        "min_speedup": min(c["speedup"] for c in cases),
+        "ok": ok,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    for c in cases:
+        gates = "ok" if (c["gate_zero_codegen"]
+                         and c["gate_one_analysis_per_graph"]
+                         and c["gate_equal"]) else "FAIL"
+        print(f"{c['name']:34s} fast={c['wall_fast_s']:7.3f}s "
+              f"ref={c['wall_ref_s']:7.3f}s speedup={c['speedup']:5.1f}x "
+              f"codegen={c['counts_fast']['codegen_calls']} "
+              f"equal={int(c['equal'])} {gates}")
+    print(f"min_speedup={report['min_speedup']:.1f}x -> {args.out}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

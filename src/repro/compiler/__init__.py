@@ -9,7 +9,16 @@ from .partition import Partition, Stage, partition
 from .weights import WeightSchedule, schedule_weights, CHUNK_BYTES
 from .memory import MemoryPlan, TensorPlan, assign_channels, buffer_requirements
 from .codegen import generate_programs
-from .compile import CompiledModel, compile_model
+from .compile import (
+    STATS,
+    CompiledModel,
+    CompileStats,
+    GraphAnalysis,
+    analyze,
+    clear_analysis_cache,
+    compile_model,
+    place,
+)
 from . import zoo
 
 __all__ = [
@@ -32,7 +41,13 @@ __all__ = [
     "assign_channels",
     "buffer_requirements",
     "generate_programs",
+    "STATS",
     "CompiledModel",
+    "CompileStats",
+    "GraphAnalysis",
+    "analyze",
+    "clear_analysis_cache",
     "compile_model",
+    "place",
     "zoo",
 ]

@@ -16,6 +16,11 @@ computational correctness:
 
 The pass returns a new topologically-ordered Graph whose compute nodes map
 1:1 onto PU GEMM executions.
+
+Fusion is config-independent: it runs once per graph content inside
+``repro.compiler.analyze`` (memoized by ``Graph.fingerprint``) and the fused
+graph is shared — read-only — by every (a, b) configuration a DSE sweep
+evaluates.
 """
 from __future__ import annotations
 

@@ -9,13 +9,17 @@ State: f(i, u1, u2) = minimal achievable max-stage-time for nodes[i:] given
 u1 PU1x and u2 PU2x units still available. Transition: give the next stage
 nodes[i:j] on either PU type. O(N^2 * a * b) — trivially fast at DNN scale.
 
+The state value is independent of the *total* budget a configuration starts
+from, so one memo table serves every (a, b) of a DSE sweep: callers may pass
+a shared ``memo`` dict (``repro.compiler.GraphAnalysis`` does) and config
+(a', b') reuses every subproblem config (a, b) already solved.
+
 The returned stage order interleaves PU types optimally; empty stages are
 allowed (a configuration may leave PUs idle if that is optimal).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import lru_cache
 
 from .graph import Graph
 from .profiler import NodeProfile
@@ -64,8 +68,14 @@ def partition(
     profiles: dict[str, dict[int, NodeProfile]],
     n_pu1x: int,
     n_pu2x: int,
+    *,
+    memo: dict | None = None,
 ) -> Partition:
-    """DP partition of the fused graph onto (n_pu1x, n_pu2x) PUs."""
+    """DP partition of the fused graph onto (n_pu1x, n_pu2x) PUs.
+
+    ``memo`` is an optional shared f(i, u1, u2) table; pass the same dict
+    for repeated calls over the same (graph, profiles) — e.g. a Step-1
+    enumeration — to reuse every overlapping subproblem across configs."""
     order = [nd.nid for nd in g.nodes]
     n = len(order)
 
@@ -81,26 +91,35 @@ def partition(
     def seg_cost(kind: str, i: int, j: int) -> float:
         return prefix[kind][j] - prefix[kind][i]
 
-    @lru_cache(maxsize=None)
+    cache: dict[tuple[int, int, int], float] = memo if memo is not None else {}
+
     def f(i: int, u1: int, u2: int) -> float:
         if i >= n:
             return 0.0
         if u1 == 0 and u2 == 0:
             return INF
+        key = (i, u1, u2)
+        hit = cache.get(key)
+        if hit is not None:
+            return hit
         best = INF
         for kind, avail in (("PU1x", u1), ("PU2x", u2)):
             if not avail:
                 continue
             nu1, nu2 = (u1 - 1, u2) if kind == "PU1x" else (u1, u2 - 1)
+            row = prefix[kind]
+            base = row[i]
             # j = end of this stage (exclusive); empty stages allowed.
             for j in range(i, n + 1):
-                c = seg_cost(kind, i, j)
+                c = row[j] - base
                 if c >= best:
                     break  # costs are monotone in j
-                rest = f(j, nu1, nu2)
-                val = max(c, rest)
+                val = f(j, nu1, nu2)
+                if c > val:
+                    val = c
                 if val < best:
                     best = val
+        cache[key] = best
         return best
 
     # Reconstruct.

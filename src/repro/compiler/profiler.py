@@ -26,7 +26,10 @@ optional PRM + REQ/ACK handshakes per stream); dynamic weight-chunk issue
 decodes are added by the compile driver once the weight schedule is known.
 
 Profiles are computed per PU *type* (PU1x / PU2x); weight-streaming stalls are
-handled separately by ``repro.compiler.weights`` (Sec. IV-B).
+handled separately by ``repro.compiler.weights`` (Sec. IV-B). Like fusion,
+profiling is config-independent: ``repro.compiler.analyze`` runs it once per
+graph content and every (a, b) placement of a DSE sweep reads the same
+profile table.
 """
 from __future__ import annotations
 

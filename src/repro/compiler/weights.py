@@ -27,6 +27,7 @@ older per-tile overlap estimate.
 """
 from __future__ import annotations
 
+import heapq
 import math
 from dataclasses import dataclass, field
 
@@ -55,6 +56,29 @@ class Tile:
         return self.dynamic_chunks * CHUNK_BYTES
 
 
+def _node_stalls(
+    order: list[int],
+    node_exec: dict[int, float],
+    node_stream: dict[int, float],
+    node_dyn: dict[int, int],
+    t_chunk_load: float,
+) -> dict[int, float]:
+    """Execution stall before each node's GEMM, per the codegen issue order:
+    node j's dynamic chunks (and weight-port streams) load during node j-1's
+    SA execution (cyclically across rounds for j==0); whatever does not fit
+    stalls node j. Shared by the analytic model (`WeightSchedule.node_stalls`)
+    and the greedy allocator's inner loop so the two can never drift."""
+    stalls: dict[int, float] = {}
+    for j, nid in enumerate(order):
+        load = node_dyn.get(nid, 0) * t_chunk_load + node_stream.get(nid, 0.0)
+        if load <= 0.0:
+            continue
+        s = load - node_exec.get(order[j - 1], 0.0)
+        if s > 0.0:
+            stalls[nid] = s
+    return stalls
+
+
 @dataclass
 class WeightSchedule:
     tiles: list[Tile]
@@ -79,21 +103,9 @@ class WeightSchedule:
         return max(0.0, load - prev_exec)
 
     def node_stalls(self) -> dict[int, float]:
-        """Execution stall before each node's GEMM, per the codegen issue
-        order: node j's dynamic chunks (and weight-port streams) load during
-        node j-1's SA execution; whatever does not fit stalls node j."""
-        dyn = self.node_dynamic_chunks()
-        stalls: dict[int, float] = {}
-        order = self.node_order
-        for j, nid in enumerate(order):
-            load = dyn.get(nid, 0) * self.t_chunk_load + self.node_stream.get(nid, 0.0)
-            if load <= 0.0:
-                continue
-            window = self.node_exec.get(order[j - 1], 0.0)  # cyclic for j==0
-            s = load - window
-            if s > 0.0:
-                stalls[nid] = s
-        return stalls
+        """Execution stall before each node's GEMM (see ``_node_stalls``)."""
+        return _node_stalls(self.node_order, self.node_exec, self.node_stream,
+                            self.node_dynamic_chunks(), self.t_chunk_load)
 
     def total_stall(self) -> float:
         if self.node_order:
@@ -186,29 +198,65 @@ def schedule_weights(g: Graph, nids: list[int], pu: PUSpec) -> WeightSchedule:
             t.static_chunks = t.n_chunks
         return sched
 
-    tiles_of_node: dict[int, list[Tile]] = {}
-    for t in tiles:
-        tiles_of_node.setdefault(t.nid, []).append(t)
+    # Iteratively pin one chunk of the most deficit-prone node (the node
+    # whose remaining dynamic loads stall its GEMM the longest). The loop
+    # below replays exactly the greedy decisions of the straightforward
+    # implementation (stable sorts, most-dynamic-tile-first, first feasible
+    # pin wins) but keeps the capacity invariant incrementally: per-tile
+    # dynamic counts, per-node totals, and a lazy max-heap over the
+    # adjacent-pair dynamic footprints replace the O(tiles) rescans that
+    # used to dominate DSE sweeps over weight-heavy graphs.
+    n = len(tiles)
+    dyn = [t.n_chunks for t in tiles]  # all chunks start dynamic
+    idx_of_node: dict[int, list[int]] = {}
+    for i, t in enumerate(tiles):
+        idx_of_node.setdefault(t.nid, []).append(i)
+    node_dyn = {nid: sum(dyn[i] for i in ixs) for nid, ixs in idx_of_node.items()}
+    static_total = 0
+    if n > 1:
+        pair = [dyn[i] + dyn[(i + 1) % n] for i in range(n)]
+        heap = [(-pair[i], i) for i in range(n)]
+        heapq.heapify(heap)
+
+    def worst_pair() -> int:
+        if n == 1:
+            return dyn[0]
+        while heap and -heap[0][0] != pair[heap[0][1]]:
+            heapq.heappop(heap)  # stale entry
+        return -heap[0][0] if heap else 0
+
+    def feasible_now() -> bool:
+        return (static_total + worst_pair()) * CHUNK_BYTES <= sched.capacity_bytes
+
+    def bump(i: int, delta: int) -> None:
+        dyn[i] += delta
+        if n > 1:
+            for p in {i, (i - 1) % n}:
+                pair[p] += delta
+                heapq.heappush(heap, (-pair[p], p))
 
     def pin_one(nid: int) -> bool:
         """Pin one chunk of ``nid`` (from its most dynamic tile) if the
         capacity constraint allows it."""
-        for t in sorted(tiles_of_node[nid], key=lambda t: -t.dynamic_chunks):
-            if t.dynamic_chunks == 0:
+        nonlocal static_total
+        for i in sorted(idx_of_node[nid], key=lambda i: -dyn[i]):
+            if dyn[i] == 0:
                 continue
-            t.static_chunks += 1
-            if sched.feasible():
+            bump(i, -1)
+            static_total += 1
+            if feasible_now():
+                tiles[i].static_chunks += 1
+                node_dyn[nid] -= 1
                 return True
-            t.static_chunks -= 1  # revert; capacity bound hit
+            bump(i, +1)  # revert; capacity bound hit
+            static_total -= 1
         return False
 
-    # Iteratively pin one chunk of the most deficit-prone node (the node
-    # whose remaining dynamic loads stall its GEMM the longest).
+    t_load = sched.t_chunk_load
     while True:
-        stalls = sched.node_stalls()
-        dyn = sched.node_dynamic_chunks()
+        stalls = _node_stalls(nids, node_exec, node_stream, node_dyn, t_load)
         candidates = sorted(
-            (nid for nid in stalls if dyn.get(nid, 0) > 0),
+            (nid for nid in stalls if node_dyn.get(nid, 0) > 0),
             key=lambda nid: stalls[nid],
             reverse=True,
         )

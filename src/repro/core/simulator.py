@@ -46,8 +46,14 @@ def _steady_fps(round_ends: list[float], warmup: int, sys_clk_hz: float,
                 fallback_rounds: int, end_cycles: float) -> float:
     """Steady-state rounds/s measured after ``warmup`` rounds."""
     if len(round_ends) <= warmup:
-        if not round_ends or not end_cycles:
+        if not round_ends:
             return 0.0
+        if not end_cycles:
+            # Rounds completed but no run-end timestamp was recorded:
+            # estimate from the rounds themselves instead of reporting 0.
+            if not round_ends[-1]:
+                return 0.0
+            return len(round_ends) / (round_ends[-1] / sys_clk_hz)
         return fallback_rounds / (end_cycles / sys_clk_hz)
     n = len(round_ends) - warmup
     if warmup > 0:

@@ -247,6 +247,10 @@ def compile_deployment(
             pid_offset=res.pid_offset if strategy.batch > 1 else None,
             channel_pool=list(res.channel_pool) if strategy.batch > 1 else None,
         )
+        # Force instruction generation here: compilation is lazy (the DSE
+        # evaluates thousands of configs without ever emitting instructions),
+        # and the deploy boundary is where a design point becomes executable.
+        cm.ensure_programs()
         members.append(DeployedMember(index=res.index, config=res.config,
                                       workload=workload, compiled=cm,
                                       resources=res))

@@ -11,10 +11,11 @@ from .explorer import (
     ValidationRecord,
     enumerate_multi_batch,
     enumerate_single_batch,
+    enumerate_single_batch_reference,
     explore,
     explore_multi,
 )
-from .pareto import constrained, pareto_front
+from .pareto import constrained, pareto_front, pareto_front_bruteforce
 
 __all__ = [
     "DSEResult",
@@ -26,8 +27,10 @@ __all__ = [
     "ValidationRecord",
     "enumerate_multi_batch",
     "enumerate_single_batch",
+    "enumerate_single_batch_reference",
     "explore",
     "explore_multi",
     "constrained",
     "pareto_front",
+    "pareto_front_bruteforce",
 ]

@@ -1,33 +1,51 @@
 """Three-step Design Space Exploration (paper Sec. V-A, Fig. 5).
 
 Step 1 — enumerate all feasible single-batch configurations (a, b): a PU1x +
-b PU2x units pipelining one batch. With 5+5 PUs this yields 35 configs; each
-is compiled through the full framework and its performance cached.
+b PU2x units pipelining one batch. With 5+5 PUs this yields 35 configs. The
+config-independent compile work (fusion, profiling, per-segment weight
+scheduling) is done **once per graph** (``repro.compiler.analyze``, memoized
+by graph fingerprint) and every config is evaluated by the cheap
+``repro.compiler.place`` — no memory planning and no instruction codegen
+happens anywhere in the sweep; programs are generated lazily only when a
+design point is actually deployed.
 
 Step 2 — compose multi-batch schedules: all unordered combinations of
 single-batch configurations within the PU resource constraint. Each batch is
 processed by a disjoint PU subset with internal pipeline parallelism (hybrid
 parallelism). Schedule metrics: aggregated throughput, system latency (the
-slowest member), cumulative TOPS of assigned PUs.
+slowest member), cumulative TOPS of assigned PUs. Member configs that are
+strictly Pareto-dominated at equal-or-lower PU cost are pruned from the
+composition (frontier- and DP-point-preserving at tolerance 0; see
+``_cost_dominated_configs``).
 
-Step 3 — Pareto analysis (repro.dse.pareto) + application constraints.
+Step 3 — Pareto analysis (repro.dse.pareto; sort-based O(n log n) for the
+2-objective case) + application constraints.
 
 Multi-tenant co-exploration (``explore_multi``) generalizes Step 2 across
-*models*: each tenant graph gets its own Step-1 cache, joint placements
-assign every tenant a disjoint (a, b) slice of the one machine, and the
-Pareto front is taken over the vector of per-tenant rates — the
-FPGA-virtualization scenario (different models serving different tenants)
-on the paper's fixed PU array.
+*models*: each tenant graph gets its own Step-1 cache (tenants referencing
+the same graph content share one), joint placements assign every tenant a
+disjoint (a, b) slice of the one machine, and the Pareto front is taken over
+the vector of per-tenant rates — the FPGA-virtualization scenario (different
+models serving different tenants) on the paper's fixed PU array. The joint
+recursion is bounded by remaining-budget best-case throughput: a partial
+placement whose optimistic completion is already strictly dominated by a
+found point is abandoned.
+
+``explore``/``explore_multi`` accept ``engine="reference"`` to run the
+pre-caching brute-force engine (full recompile incl. eager codegen per
+config, unpruned composition, O(n²) Pareto) — the oracle the equivalence
+tests and ``benchmarks/dse_bench.py`` measure the fast engine against.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Optional
 
-from ..compiler.compile import CompiledModel, compile_model
+from ..compiler.compile import analyze, place
 from ..compiler.graph import Graph
 from ..core.pu import PUSpec, make_u50_system
-from .pareto import pareto_front
+from .pareto import pareto_front, pareto_front_bruteforce
 
 PU1X_TOPS = 0.3072
 PU2X_TOPS = 0.6144
@@ -82,35 +100,96 @@ class MultiBatchSchedule:
         return sum(c[1] for c in self.configs)
 
 
+def _point_of(cm, a: int, b: int) -> SingleBatchPoint:
+    return SingleBatchPoint(a=a, b=b, fps=cm.predicted_fps,
+                            latency=cm.predicted_latency, tops=cm.used_tops,
+                            pbe=cm.pbe())
+
+
 def enumerate_single_batch(
     g: Graph,
     *,
     n_pu1x: int = 5,
     n_pu2x: int = 5,
     pus: Optional[list[PUSpec]] = None,
-    keep_compiled: bool = False,
-) -> tuple[list[SingleBatchPoint], dict[tuple[int, int], CompiledModel]]:
-    """Step 1: compile every (a, b) and cache its characteristics."""
+) -> list[SingleBatchPoint]:
+    """Step 1: evaluate every (a, b) against one shared graph analysis.
+
+    Fusion/profiling/weight-scheduling results come from the memoized
+    ``analyze`` artifact; each config only pays the DP partition and stage
+    arithmetic of ``place``. No instructions are generated."""
     pus = pus if pus is not None else make_u50_system()
+    ana = analyze(g, pus)
     points: list[SingleBatchPoint] = []
-    compiled: dict[tuple[int, int], CompiledModel] = {}
     for a in range(n_pu1x + 1):
         for b in range(n_pu2x + 1):
             if a + b == 0:
                 continue
-            cm = compile_model(g, a, b, pus=pus)
-            pt = SingleBatchPoint(
-                a=a,
-                b=b,
-                fps=cm.predicted_fps,
-                latency=cm.predicted_latency,
-                tops=cm.used_tops,
-                pbe=cm.pbe(),
-            )
-            points.append(pt)
-            if keep_compiled:
-                compiled[(a, b)] = cm
-    return points, compiled
+            points.append(_point_of(place(ana, a, b, pus=pus), a, b))
+    return points
+
+
+def enumerate_single_batch_reference(
+    g: Graph,
+    *,
+    n_pu1x: int = 5,
+    n_pu2x: int = 5,
+    pus: Optional[list[PUSpec]] = None,
+) -> list[SingleBatchPoint]:
+    """The pre-caching Step 1: re-run the *entire* compiler — fusion,
+    profiling, weight scheduling, memory planning and eager instruction
+    codegen whose programs are immediately discarded — once per config.
+    Kept as the brute-force baseline for the equivalence suite and the
+    before/after measurements of ``benchmarks/dse_bench.py``."""
+    pus = pus if pus is not None else make_u50_system()
+    points: list[SingleBatchPoint] = []
+    for a in range(n_pu1x + 1):
+        for b in range(n_pu2x + 1):
+            if a + b == 0:
+                continue
+            ana = analyze(g, pus, use_cache=False)
+            cm = place(ana, a, b, pus=pus)
+            cm.ensure_programs()  # eager codegen, as the old engine did
+            points.append(_point_of(cm, a, b))
+    return points
+
+
+def _cost_dominated_configs(
+    by_cfg: dict[tuple[int, int], SingleBatchPoint],
+    *,
+    use_latency: bool,
+) -> set[tuple[int, int]]:
+    """Member configs strictly dominated at equal-or-lower PU cost: another
+    config uses no more PU1x and no more PU2x yet achieves *strictly* higher
+    fps (and, with ``use_latency``, no worse latency).
+
+    Composing with such a config can never help: swapping in the dominating
+    config yields a feasible schedule with the same batch and strictly
+    higher throughput (throughput — per schedule or per tenant — is a sum
+    resp. a vector component, so the member-level improvement is never
+    masked) — so at tolerance 0 every schedule containing a dominated config
+    is strictly dominated (off the frontier) and DP-B's tie-breaks resolve
+    to the surviving, earlier-enumerated schedule. The fps *strictness* is
+    load-bearing: a config better only in latency must be kept, because
+    schedule latency is a max over members and another member can mask the
+    improvement, leaving the two schedules exactly tied — and tied schedules
+    are all frontier members. Exact fps ties (common when extra PUs add
+    nothing) are therefore never pruned, which keeps frontiers byte-identical
+    to the brute-force path.
+
+    ``use_latency=True`` (single-model Step 2) additionally requires the
+    dominating config not to worsen latency, since schedule latency is an
+    objective there; ``use_latency=False`` (multi-tenant joint placements)
+    ignores latency because the joint frontier is over fps vectors only."""
+    dead: set[tuple[int, int]] = set()
+    for c, p in by_cfg.items():
+        for c2, q in by_cfg.items():
+            if (c2 != c and c2[0] <= c[0] and c2[1] <= c[1]
+                    and q.fps > p.fps
+                    and (not use_latency or q.latency <= p.latency)):
+                dead.add(c)
+                break
+    return dead
 
 
 def enumerate_multi_batch(
@@ -118,10 +197,18 @@ def enumerate_multi_batch(
     *,
     n_pu1x: int = 5,
     n_pu2x: int = 5,
+    prune: bool = True,
 ) -> list[MultiBatchSchedule]:
-    """Step 2: all unordered combinations under the PU resource constraint."""
+    """Step 2: all unordered combinations under the PU resource constraint.
+
+    ``prune=True`` drops member configs that are strictly dominated at
+    equal-or-lower cost before composing (see ``_cost_dominated_configs``) —
+    pass ``prune=False`` for the exhaustive brute-force composition."""
     by_cfg = {p.config: p for p in points}
     cfgs = sorted(by_cfg)  # deterministic order for unordered enumeration
+    if prune:
+        dead = _cost_dominated_configs(by_cfg, use_latency=True)
+        cfgs = [c for c in cfgs if c not in dead]
     schedules: list[MultiBatchSchedule] = []
 
     def rec(idx: int, rem_a: int, rem_b: int, chosen: list[tuple[int, int]]) -> None:
@@ -179,14 +266,21 @@ class DSEResult:
     graph: Optional[Graph] = None
     pus: Optional[list[PUSpec]] = None
     workload: "Optional[object]" = None  # repro.deploy.Workload when given
+    # the PU budget that was explored (DP-C's one-PU-per-batch target and
+    # any other budget-derived design point read these, so non-default PU
+    # arrays resolve correctly instead of raising LookupError)
+    n_pu1x: int = 5
+    n_pu2x: int = 5
     validation: list[ValidationRecord] = field(default_factory=list)
 
     def deploy(self, point_or_schedule, *, rounds: Optional[int] = None):
         """Compile any Step-1 point / Step-2 schedule (or raw config tuple)
         of this exploration into an executable Deployment — every DSE design
-        point is one call away from the simulator. ``rounds=None`` keeps the
-        per-workload default (explicit Workload.rounds, else one full decode
-        window for decode graphs, else 16)."""
+        point is one call away from the simulator. Instruction programs are
+        generated here (and only here): the exploration itself never runs
+        codegen. ``rounds=None`` keeps the per-workload default (explicit
+        Workload.rounds, else one full decode window for decode graphs,
+        else 16)."""
         if self.graph is None:
             raise ValueError("this DSEResult carries no graph to deploy")
         from ..deploy import Strategy, compile_deployment
@@ -218,8 +312,9 @@ class DSEResult:
 
     @property
     def dp_c(self) -> MultiBatchSchedule:
-        """Maximum batch-level parallelism: one PU per batch."""
-        target = tuple(sorted([(1, 0)] * 5 + [(0, 1)] * 5))
+        """Maximum batch-level parallelism: one PU per batch, for the PU
+        budget this exploration actually ran with."""
+        target = tuple(sorted([(1, 0)] * self.n_pu1x + [(0, 1)] * self.n_pu2x))
         for s in self.multi:
             if s.configs == target:
                 return s
@@ -339,16 +434,46 @@ class MultiDSEResult:
         return System(pus=self.pus).load(dep).run()
 
 
+def _best_case_fps(
+    points: list[SingleBatchPoint], n_pu1x: int, n_pu2x: int
+) -> list[list[float]]:
+    """best[ra][rb] = max fps this tenant can reach with a budget of
+    (ra PU1x, rb PU2x) — the optimistic completion bound of the joint
+    recursion. -inf where nothing fits."""
+    best = [[-math.inf] * (n_pu2x + 1) for _ in range(n_pu1x + 1)]
+    by_cfg = {p.config: p for p in points}
+    for ra in range(n_pu1x + 1):
+        for rb in range(n_pu2x + 1):
+            v = -math.inf
+            if ra > 0:
+                v = max(v, best[ra - 1][rb])
+            if rb > 0:
+                v = max(v, best[ra][rb - 1])
+            p = by_cfg.get((ra, rb))
+            if p is not None:
+                v = max(v, p.fps)
+            best[ra][rb] = v
+    return best
+
+
 def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
                   tolerance: float = 0.0, pus: Optional[list[PUSpec]] = None,
-                  validate: int = 0, validate_rounds: int = 5) -> MultiDSEResult:
+                  validate: int = 0, validate_rounds: int = 5,
+                  engine: str = "fast") -> MultiDSEResult:
     """Co-explore joint placements of several tenant models on one machine.
 
     ``graphs`` is a list of Graphs (or deploy ``Workload``s), one per tenant.
-    Every tenant is compiled through its own Step-1 enumeration; joint
+    Every tenant is compiled through its own Step-1 enumeration — tenants
+    whose graphs have identical content (by fingerprint) share one — joint
     placements give each tenant one disjoint (a, b) member pipeline under
     the shared PU budget, and the returned frontier is Pareto-optimal in the
-    vector of per-tenant rates (tenant-A fps, tenant-B fps, ...).
+    vector of per-tenant rates (tenant-A fps, tenant-B fps, ...). At
+    tolerance 0 the joint recursion prunes per-tenant configs that are
+    strictly fps-dominated at equal-or-lower cost and abandons partial
+    placements whose best-case completion (each remaining tenant granted the
+    whole remaining budget) is already strictly dominated — both are
+    frontier-preserving; ``engine="reference"`` disables them and runs the
+    brute-force engine.
 
     ``validate=N`` deploys + simulates up to N joint placements (the
     max-min-fair ``balanced`` point first, then the frontier by normalized
@@ -360,42 +485,102 @@ def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
     their full advancing-length cycle."""
     from ..deploy import Workload
 
+    if engine not in ("fast", "reference"):
+        raise ValueError(f"unknown engine {engine!r}")
     workloads = tuple(Workload.of(g) for g in graphs)
     if len(workloads) < 2:
         raise ValueError("explore_multi needs at least two tenant graphs")
     pus = pus if pus is not None else make_u50_system()
+    fast = engine == "fast"
+    # pruning is frontier-preserving only under exact dominance; a nonzero
+    # Pareto tolerance admits near-dominated points, so sweep exhaustively.
+    prune = fast and tolerance == 0.0
 
     singles: list[list[SingleBatchPoint]] = []
     caches: list[dict[tuple[int, int], SingleBatchPoint]] = []
+    step1_by_fp: dict[str, list[SingleBatchPoint]] = {}
     for w in workloads:
-        pts, _ = enumerate_single_batch(w.graph, n_pu1x=n_pu1x, n_pu2x=n_pu2x,
-                                        pus=pus)
+        fp = w.graph.fingerprint()
+        pts = step1_by_fp.get(fp) if fast else None
+        if pts is None:
+            enum = enumerate_single_batch if fast else enumerate_single_batch_reference
+            pts = enum(w.graph, n_pu1x=n_pu1x, n_pu2x=n_pu2x, pus=pus)
+            step1_by_fp[fp] = pts
         singles.append(pts)
         caches.append({p.config: p for p in pts})
 
     # Joint enumeration: one ordered config per tenant, disjoint PU budgets.
     points: list[MultiTenantPoint] = []
-    cfg_lists = [sorted(c) for c in caches]
+    if prune:
+        cfg_lists = []
+        for cache in caches:
+            dead = _cost_dominated_configs(cache, use_latency=False)
+            cfg_lists.append(sorted(c for c in cache if c not in dead))
+    else:
+        cfg_lists = [sorted(c) for c in caches]
+    best_case = [_best_case_fps(s, n_pu1x, n_pu2x) for s in singles]
+    n_tenants = len(workloads)
+    incumbents: list[tuple[float, ...]] = []  # non-dominated fps vectors
 
-    def rec(i: int, rem_a: int, rem_b: int, chosen: list[tuple[int, int]]) -> None:
-        if i == len(workloads):
+    def bounded_out(i: int, rem_a: int, rem_b: int, got: list[float]) -> bool:
+        """True when this partial placement cannot contribute a frontier
+        point: a remaining tenant cannot fit at all, or the optimistic
+        completion is strictly dominated by an already-found placement."""
+        if rem_a + rem_b < n_tenants - i:  # every tenant needs >= 1 PU
+            return True
+        opt = list(got)
+        for j in range(i, n_tenants):
+            b = best_case[j][rem_a][rem_b]
+            if b == -math.inf:
+                return True
+            opt.append(b)
+        if not prune:
+            return False
+        for inc in incumbents:
+            if (all(x >= o for x, o in zip(inc, opt))
+                    and any(x > o for x, o in zip(inc, opt))):
+                return True
+        return False
+
+    def note_incumbent(fps: tuple[float, ...]) -> None:
+        incumbents[:] = [
+            inc for inc in incumbents
+            if not (all(f >= x for f, x in zip(fps, inc))
+                    and any(f > x for f, x in zip(fps, inc)))
+        ]
+        if not any(
+            all(x >= f for x, f in zip(inc, fps))
+            for inc in incumbents
+        ):
+            incumbents.append(fps)
+
+    def rec(i: int, rem_a: int, rem_b: int, chosen: list[tuple[int, int]],
+            got: list[float]) -> None:
+        if i == n_tenants:
             members = [caches[j][c] for j, c in enumerate(chosen)]
+            fps = tuple(m.fps for m in members)
             points.append(
                 MultiTenantPoint(
                     configs=tuple(chosen),
-                    fps=tuple(m.fps for m in members),
+                    fps=fps,
                     latency=tuple(m.latency for m in members),
                     tops=sum(m.tops for m in members),
                 )
             )
+            if prune:
+                note_incumbent(fps)
+            return
+        if bounded_out(i, rem_a, rem_b, got):
             return
         for a, b in cfg_lists[i]:
             if a <= rem_a and b <= rem_b:
                 chosen.append((a, b))
-                rec(i + 1, rem_a - a, rem_b - b, chosen)
+                got.append(caches[i][(a, b)].fps)
+                rec(i + 1, rem_a - a, rem_b - b, chosen, got)
+                got.pop()
                 chosen.pop()
 
-    rec(0, n_pu1x, n_pu2x, [])
+    rec(0, n_pu1x, n_pu2x, [], [])
     if not points:
         raise ValueError(
             f"no joint placement fits {len(workloads)} tenants in "
@@ -405,7 +590,8 @@ def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
     objectives = [
         (lambda p, i=i: p.fps[i]) for i in range(len(workloads))
     ]
-    frontier = pareto_front(points, objectives, tolerance=tolerance)
+    front = pareto_front if fast else pareto_front_bruteforce
+    frontier = front(points, objectives, tolerance=tolerance)
 
     res = MultiDSEResult(workloads=workloads, singles=singles, points=points,
                          frontier=frontier, pus=pus)
@@ -443,19 +629,32 @@ def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
 
 def explore(g, *, n_pu1x: int = 5, n_pu2x: int = 5,
             tolerance: float = 0.0, pus: Optional[list[PUSpec]] = None,
-            validate: int = 0, validate_rounds: int = 5) -> DSEResult:
+            validate: int = 0, validate_rounds: int = 5,
+            engine: str = "fast") -> DSEResult:
     """Run the three DSE steps; optionally cross-check the analytic cache.
 
     ``g`` is a Graph or a deploy ``Workload`` — any frontend graph flows
     through unchanged, including decode-phase graphs
     (``zoo.transformer_decoder``) whose K/V-cache scheduling is entirely a
     compiler/ISA concern: a decode tenant enumerates, composes and deploys
-    exactly like a prefill or CNN tenant. ``validate=N`` deploys + simulates
-    up to N schedules (the design points DP-A/C/B first, then the
-    throughput-ordered multi-batch frontier) and records
-    analytic-vs-simulated throughput in ``DSEResult.validation``; decode
-    workloads validate over one full decode window (not ``validate_rounds``)
-    so the cross-check covers the whole advancing-length cycle."""
+    exactly like a prefill or CNN tenant.
+
+    The default ``engine="fast"`` shares one memoized graph analysis across
+    all Step-1 configs, generates **zero** instructions (codegen runs only
+    when a point is deployed), prunes cost-dominated member configs from the
+    Step-2 composition when ``tolerance == 0``, and extracts the frontier
+    with the sort-based O(n log n) Pareto. ``engine="reference"`` is the
+    pre-caching brute-force engine; both produce identical frontiers and
+    design points (locked by the equivalence suite in tests/test_dse.py).
+
+    ``validate=N`` deploys + simulates up to N schedules (the design points
+    DP-A/C/B first, then the throughput-ordered multi-batch frontier) and
+    records analytic-vs-simulated throughput in ``DSEResult.validation``;
+    decode workloads validate over one full decode window (not
+    ``validate_rounds``) so the cross-check covers the whole
+    advancing-length cycle."""
+    if engine not in ("fast", "reference"):
+        raise ValueError(f"unknown engine {engine!r}")
     workload = None
     if not isinstance(g, Graph):
         from ..deploy import Workload
@@ -463,16 +662,23 @@ def explore(g, *, n_pu1x: int = 5, n_pu2x: int = 5,
         workload = Workload.of(g)
         g = workload.graph
     pus = pus if pus is not None else make_u50_system()
-    single, _ = enumerate_single_batch(g, n_pu1x=n_pu1x, n_pu2x=n_pu2x, pus=pus)
-    multi = enumerate_multi_batch(single, n_pu1x=n_pu1x, n_pu2x=n_pu2x)
-    sf = pareto_front(
+    fast = engine == "fast"
+    enum = enumerate_single_batch if fast else enumerate_single_batch_reference
+    single = enum(g, n_pu1x=n_pu1x, n_pu2x=n_pu2x, pus=pus)
+    # pruning is frontier-preserving only under exact dominance; a nonzero
+    # Pareto tolerance admits near-dominated points, so sweep exhaustively.
+    multi = enumerate_multi_batch(single, n_pu1x=n_pu1x, n_pu2x=n_pu2x,
+                                  prune=fast and tolerance == 0.0)
+    front = pareto_front if fast else pareto_front_bruteforce
+    sf = front(
         single, [lambda p: p.fps, lambda p: -p.latency], tolerance=tolerance
     )
-    mf = pareto_front(
+    mf = front(
         multi, [lambda s: s.throughput, lambda s: -s.latency], tolerance=tolerance
     )
     res = DSEResult(single=single, multi=multi, single_frontier=sf,
-                    multi_frontier=mf, graph=g, pus=pus, workload=workload)
+                    multi_frontier=mf, graph=g, pus=pus, workload=workload,
+                    n_pu1x=n_pu1x, n_pu2x=n_pu2x)
     if validate > 0:
         # decode workloads (or explicit Workload.rounds) validate over their
         # own full window; everything else uses the quick validate_rounds.

@@ -1,12 +1,26 @@
-"""DSE methodology tests (paper Sec. V-A, Figs. 5/6, Table III claims) and
-multi-tenant co-exploration (joint placements of several models)."""
+"""DSE methodology tests (paper Sec. V-A, Figs. 5/6, Table III claims),
+multi-tenant co-exploration (joint placements of several models), and the
+fast-engine guarantees: cached/pruned/lazy exploration is byte-identical to
+the brute-force reference engine, never generates instructions, and the
+sort-based Pareto matches the O(n²) oracle."""
+import math
+
 import pytest
 
-from repro.compiler import zoo
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.compiler import STATS, clear_analysis_cache, zoo
 from repro.dse import (
     constrained,
     explore,
     explore_multi,
+    pareto_front,
+    pareto_front_bruteforce,
 )
 
 
@@ -165,3 +179,224 @@ class TestExploreMulti:
     def test_rejects_single_tenant(self):
         with pytest.raises(ValueError):
             explore_multi([zoo.tiny_cnn()])
+
+
+# ---------------------------------------------------------------------------
+# Fast-engine guarantees: equivalence, laziness, budget-derived DP-C, Pareto
+# ---------------------------------------------------------------------------
+
+
+def _graphs_under_test():
+    return [
+        zoo.tiny_cnn(channels=(16, 32, 32), hw=16),
+        zoo.transformer_encoder("qwen3-0.6b", seq_len=64, depth=1),
+    ]
+
+
+class TestFastEngineEquivalence:
+    """The cached/pruned/lazy engine must return *byte-identical* frontiers
+    and design points vs. the brute-force reference path (which recompiles
+    everything per config, composes unpruned, and uses the O(n²) Pareto)."""
+
+    @pytest.mark.parametrize("gi", [0, 1], ids=["tiny_cnn", "qwen3_enc"])
+    def test_explore_identical(self, gi):
+        g = _graphs_under_test()[gi]
+        fast = explore(g)
+        ref = explore(g, engine="reference")
+        assert fast.single == ref.single
+        assert fast.single_frontier == ref.single_frontier
+        assert fast.multi_frontier == ref.multi_frontier
+        assert fast.dp_a == ref.dp_a
+        assert fast.dp_b == ref.dp_b
+        assert fast.dp_c == ref.dp_c
+
+    def test_explore_identical_with_tolerance(self):
+        g = _graphs_under_test()[0]
+        fast = explore(g, tolerance=0.02)
+        ref = explore(g, engine="reference", tolerance=0.02)
+        # a nonzero tolerance disables Step-2 pruning, so the full schedule
+        # list matches too
+        assert fast.multi == ref.multi
+        assert fast.single_frontier == ref.single_frontier
+        assert fast.multi_frontier == ref.multi_frontier
+
+    def test_explore_multi_identical(self):
+        pair = _graphs_under_test()
+        fast = explore_multi(pair)
+        ref = explore_multi(pair, engine="reference")
+        assert fast.frontier == ref.frontier
+        assert fast.balanced == ref.balanced
+        assert [s for s in fast.singles] == [s for s in ref.singles]
+        # pruned points are a subset, in enumeration order
+        ref_set = set(p.configs for p in ref.points)
+        assert all(p.configs in ref_set for p in fast.points)
+
+    def test_rejects_unknown_engine(self):
+        with pytest.raises(ValueError):
+            explore(zoo.tiny_cnn(), engine="warp")
+        with pytest.raises(ValueError):
+            explore_multi(_graphs_under_test(), engine="warp")
+
+    def test_prune_keeps_fps_ties_masked_by_latency_max(self):
+        """A config better only in *latency* must survive pruning: schedule
+        latency is a max over members, so another member can mask the
+        member-level improvement and leave two schedules exactly tied — and
+        tied schedules are all frontier members in the brute-force path."""
+        from repro.dse import SingleBatchPoint, enumerate_multi_batch
+
+        pts = [
+            # (1,0) and (1,1): identical fps, (1,1) worse latency & cost —
+            # prunable only under a (broken) latency-strict rule
+            SingleBatchPoint(a=1, b=0, fps=100.0, latency=0.010, tops=0.3, pbe=1.0),
+            SingleBatchPoint(a=1, b=1, fps=100.0, latency=0.012, tops=0.9, pbe=0.5),
+            # a slow third member whose latency masks the difference above
+            SingleBatchPoint(a=0, b=1, fps=50.0, latency=0.020, tops=0.6, pbe=1.0),
+        ]
+        pruned = enumerate_multi_batch(pts, n_pu1x=2, n_pu2x=2, prune=True)
+        brute = enumerate_multi_batch(pts, n_pu1x=2, n_pu2x=2, prune=False)
+        assert pruned == brute  # nothing here is strictly fps-dominated
+        objs = [lambda s: s.throughput, lambda s: -s.latency]
+        assert pareto_front(pruned, objs) == pareto_front_bruteforce(brute, objs)
+        # sanity: a strictly fps-dominated config *is* pruned
+        pts.append(SingleBatchPoint(a=2, b=1, fps=90.0, latency=0.010,
+                                    tops=1.2, pbe=0.4))
+        pruned = enumerate_multi_batch(pts, n_pu1x=2, n_pu2x=2, prune=True)
+        assert not any((2, 1) in s.configs for s in pruned)
+
+
+class TestLazyCompile:
+    """Exploration never generates a single instruction; codegen happens at
+    deploy time only (and the per-graph analysis runs exactly once)."""
+
+    def test_explore_runs_zero_codegen(self):
+        clear_analysis_cache()
+        STATS.reset()
+        res = explore(zoo.tiny_cnn(channels=(16, 32, 32), hw=16))
+        snap = STATS.snapshot()
+        assert snap["codegen_calls"] == 0
+        assert snap["memory_plan_calls"] == 0
+        assert snap["fuse_calls"] == 1
+        assert snap["profile_calls"] == 1
+        assert snap["analysis_misses"] == 1
+        # deploying a point forces codegen for exactly its members
+        dep = res.deploy(res.dp_a, rounds=2)
+        assert STATS.snapshot()["codegen_calls"] == 1
+        assert dep.members[0].compiled.programs
+
+    def test_explore_multi_runs_zero_codegen_and_shares_same_graph(self):
+        clear_analysis_cache()
+        STATS.reset()
+        g = zoo.tiny_cnn(channels=(16, 32, 32), hw=16)
+        g2 = zoo.tiny_cnn(channels=(16, 32, 32), hw=16)  # same content
+        explore_multi([g, g2])
+        snap = STATS.snapshot()
+        assert snap["codegen_calls"] == 0
+        # identical content -> one shared Step-1 cache and one analysis
+        assert snap["analysis_misses"] == 1
+        assert snap["fuse_calls"] == 1
+
+    def test_deployed_points_still_simulate(self):
+        res = explore(zoo.tiny_cnn(channels=(16, 32, 32), hw=16))
+        sim = res.simulate(res.dp_a, rounds=4)
+        assert not sim.deadlocked
+        assert sim.aggregate_fps(warmup=1) > 0
+
+
+class TestBudgetDerivedDesignPoints:
+    """DP-C derives its one-PU-per-batch target from the explored PU budget
+    (a non-default array must not raise LookupError)."""
+
+    def test_dp_c_non_default_budget(self):
+        res = explore(zoo.tiny_cnn(channels=(16, 32, 32), hw=16),
+                      n_pu1x=3, n_pu2x=2)
+        dp_c = res.dp_c
+        assert dp_c.configs == tuple(sorted([(1, 0)] * 3 + [(0, 1)] * 2))
+        assert dp_c.batch == 5
+        assert res.n_pu1x == 3 and res.n_pu2x == 2
+
+    def test_dp_c_default_budget_unchanged(self):
+        res = explore(zoo.tiny_cnn(channels=(16, 32, 32), hw=16))
+        assert res.dp_c.configs == tuple(sorted([(1, 0)] * 5 + [(0, 1)] * 5))
+        assert res.dp_c.batch == 10
+
+
+# --------------------------------------------------------- Pareto oracle --
+def _check_matches_oracle(vals, tolerance):
+    objectives = [lambda v: v[0], lambda v: v[1]]
+    fast = pareto_front(vals, objectives, tolerance=tolerance)
+    oracle = pareto_front_bruteforce(vals, objectives, tolerance=tolerance)
+    assert fast == oracle
+
+
+PARETO_EXAMPLES = [
+    [],
+    [(1.0, 1.0)],
+    [(1.0, 2.0), (2.0, 1.0), (1.5, 1.5)],
+    [(1.0, 1.0), (1.0, 1.0)],  # exact duplicates: all kept
+    [(2.0, -1.0), (2.0, -1.0), (2.0, -2.0)],  # duplicate frontier + dominated
+    [(0.0, 0.0), (0.0, 1.0), (1.0, 0.0)],  # zeros hit the thr==value edge
+    [(-1.0, -2.0), (-2.0, -1.0), (-1.5, -1.5)],  # negative objectives
+    [(3.0, 1.0), (2.0, 2.0), (1.0, 3.0), (2.5, 0.5), (0.5, 2.5)],
+    [(1.0, 5.0), (1.0, 4.0), (2.0, 5.0)],  # equal-f1 group with dominated
+]
+
+
+@pytest.mark.parametrize("tolerance", [0.0, 0.01, 0.25])
+@pytest.mark.parametrize("vals", PARETO_EXAMPLES)
+def test_pareto_sorted_matches_oracle_examples(vals, tolerance):
+    _check_matches_oracle(list(vals), tolerance)
+
+
+def test_pareto_three_objectives_uses_bruteforce():
+    pts = [(1.0, 2.0, 3.0), (3.0, 2.0, 1.0), (2.0, 2.0, 2.0), (1.0, 1.0, 1.0)]
+    objs = [lambda v: v[0], lambda v: v[1], lambda v: v[2]]
+    assert pareto_front(pts, objs) == pareto_front_bruteforce(pts, objs)
+    assert (1.0, 1.0, 1.0) not in pareto_front(pts, objs)
+
+
+if HAVE_HYPOTHESIS:
+    finite = st.floats(min_value=-1e9, max_value=1e9, allow_nan=False,
+                       allow_infinity=False)
+    # coarse grid values force plenty of exact ties (the tricky cases)
+    gridded = st.integers(min_value=-4, max_value=4).map(lambda i: i / 2.0)
+    point2 = st.tuples(st.one_of(finite, gridded), st.one_of(finite, gridded))
+
+    @settings(max_examples=300, deadline=None)
+    @given(vals=st.lists(point2, max_size=40),
+           tolerance=st.one_of(st.just(0.0),
+                               st.floats(min_value=0.0, max_value=0.5,
+                                         allow_nan=False)))
+    def test_pareto_sorted_matches_oracle_property(vals, tolerance):
+        """The O(n log n) sweep and the O(n²) oracle agree on the exact
+        keep-set (same points, same order) for any finite 2-objective input,
+        tolerance included."""
+        _check_matches_oracle(vals, tolerance)
+
+    @settings(max_examples=100, deadline=None)
+    @given(vals=st.lists(point2, min_size=1, max_size=25))
+    def test_pareto_frontier_is_nondominated_property(vals):
+        objectives = [lambda v: v[0], lambda v: v[1]]
+        front = pareto_front(vals, objectives)
+        assert front  # a finite nonempty set always has a maximum
+        for f in front:
+            assert not any(
+                o[0] >= f[0] and o[1] >= f[1] and (o[0] > f[0] or o[1] > f[1])
+                for o in vals
+            )
+        # every excluded point is dominated by some kept point
+        kept = set(id(f) for f in front)
+        for v in vals:
+            if id(v) in kept:
+                continue
+            assert any(
+                o[0] >= v[0] and o[1] >= v[1] and (o[0] > v[0] or o[1] > v[1])
+                for o in front
+            ) or v in front  # duplicates of kept points are kept too
+
+
+def test_pareto_nonfinite_falls_back():
+    vals = [(math.inf, 0.0), (1.0, 1.0), (0.0, math.nan)]
+    objectives = [lambda v: v[0], lambda v: v[1]]
+    # no crash, and agreement with the oracle by construction (same path)
+    assert pareto_front(vals, objectives) == pareto_front_bruteforce(
+        vals, objectives)

@@ -142,3 +142,48 @@ class TestISUNetwork:
         assert worst_s < 1e-6
         t_stage = pus[0].gemm_seconds(SHAPE.m, SHAPE.n, SHAPE.k)
         assert t_stage > 100 * worst_s
+
+
+class TestSteadyFpsFallback:
+    """_steady_fps division fallbacks: completed rounds must never report
+    0 fps just because the run-end timestamp is missing."""
+
+    CLK = 300e6
+
+    def test_round_based_estimate_when_end_cycles_zero(self):
+        from repro.core.simulator import _steady_fps
+
+        # 3 rounds completed, warmup eats them all, end_cycles never set:
+        # fall back to the round-completion stream, not 0.0.
+        ends = [100.0, 200.0, 300.0]
+        fps = _steady_fps(ends, warmup=3, sys_clk_hz=self.CLK,
+                          fallback_rounds=3, end_cycles=0.0)
+        assert fps == pytest.approx(3 / (300.0 / self.CLK))
+
+    def test_zero_when_no_rounds(self):
+        from repro.core.simulator import _steady_fps
+
+        assert _steady_fps([], warmup=1, sys_clk_hz=self.CLK,
+                           fallback_rounds=0, end_cycles=0.0) == 0.0
+
+    def test_zero_when_round_end_is_zero(self):
+        from repro.core.simulator import _steady_fps
+
+        # degenerate: a "round" ending at cycle 0 cannot produce a rate
+        assert _steady_fps([0.0], warmup=1, sys_clk_hz=self.CLK,
+                           fallback_rounds=1, end_cycles=0.0) == 0.0
+
+    def test_end_cycles_fallback_still_used(self):
+        from repro.core.simulator import _steady_fps
+
+        fps = _steady_fps([100.0], warmup=1, sys_clk_hz=self.CLK,
+                          fallback_rounds=4, end_cycles=600.0)
+        assert fps == pytest.approx(4 / (600.0 / self.CLK))
+
+    def test_steady_state_path_unchanged(self):
+        from repro.core.simulator import _steady_fps
+
+        ends = [100.0, 200.0, 300.0, 400.0]
+        fps = _steady_fps(ends, warmup=1, sys_clk_hz=self.CLK,
+                          fallback_rounds=4, end_cycles=400.0)
+        assert fps == pytest.approx(3 / ((400.0 - 100.0) / self.CLK))
