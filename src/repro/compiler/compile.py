@@ -41,7 +41,7 @@ from .graph import Graph
 from .memory import MemoryPlan, assign_channels, buffer_requirements
 from .partition import Partition, partition
 from .profiler import DECODE_CYCLES, NodeProfile, profile_graph
-from .weights import WeightSchedule, schedule_weights
+from .weights import WeightSchedule, schedule_weights, segment_shape_key
 
 
 @dataclass
@@ -55,6 +55,7 @@ class CompileStats:
     fuse_calls: int = 0
     profile_calls: int = 0
     weight_schedule_calls: int = 0
+    weight_schedule_shape_hits: int = 0  # rebinds of a shape-equal schedule
     partition_calls: int = 0
     memory_plan_calls: int = 0
     codegen_calls: int = 0
@@ -98,12 +99,27 @@ class GraphAnalysis:
 
     def weight_schedule(self, nids: tuple[int, ...], pu_kind: str) -> WeightSchedule:
         """SMOF schedule for a contiguous node segment on one PU kind,
-        computed once per distinct (segment, kind) across every config."""
+        computed once per distinct (segment-*shape*, kind) across every
+        config: a segment shape-identical to an already-scheduled one (a
+        repeated transformer block under a different partition offset)
+        rebinds the cached allocation instead of re-running the greedy
+        pass."""
         key = (tuple(nids), pu_kind)
         ws = self._wscheds.get(key)
         if ws is None:
-            STATS.weight_schedule_calls += 1
-            ws = schedule_weights(self.graph, list(key[0]), self.pu_kinds[pu_kind])
+            spec = self.pu_kinds[pu_kind]
+            skey = (dataclasses.replace(spec, pid=-1, slr=-1),
+                    segment_shape_key(self.graph, key[0]))
+            canon = _WSCHED_SHAPE_CACHE.get(skey)
+            if canon is not None:
+                STATS.weight_schedule_shape_hits += 1
+                ws = canon.rebound(key[0])
+            else:
+                STATS.weight_schedule_calls += 1
+                ws = schedule_weights(self.graph, list(key[0]), spec)
+                if len(_WSCHED_SHAPE_CACHE) >= _WSCHED_SHAPE_CACHE_MAX:
+                    _WSCHED_SHAPE_CACHE.pop(next(iter(_WSCHED_SHAPE_CACHE)))
+                _WSCHED_SHAPE_CACHE[skey] = ws
             self._wscheds[key] = ws
         return ws
 
@@ -127,6 +143,14 @@ class GraphAnalysis:
 _ANALYSIS_CACHE: dict[tuple, GraphAnalysis] = {}
 _ANALYSIS_CACHE_MAX = 32
 
+# (normalized PU spec, segment shape key) -> canonical SMOF schedule,
+# shared across *analyses*: depth-scaled variants of one architecture (and
+# repeated blocks within one graph) are shape-identical per segment, so
+# they rebind the canonical allocation (WeightSchedule.rebound) instead of
+# re-running the greedy pass. Bounded; insertion-order eviction.
+_WSCHED_SHAPE_CACHE: dict[tuple, WeightSchedule] = {}
+_WSCHED_SHAPE_CACHE_MAX = 4096
+
 
 def _kind_key(pus: list[PUSpec]) -> tuple:
     """Cache-key part for the PU *types* (pid/slr placement is irrelevant to
@@ -140,6 +164,7 @@ def _kind_key(pus: list[PUSpec]) -> tuple:
 
 def clear_analysis_cache() -> None:
     _ANALYSIS_CACHE.clear()
+    _WSCHED_SHAPE_CACHE.clear()
 
 
 def analyze(

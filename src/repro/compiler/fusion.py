@@ -39,8 +39,6 @@ def fuse(g: Graph) -> Graph:
     """Apply activation-integration and GEMM+Add(+act) fusion."""
     nodes = list(g.nodes)
     consumed: set[int] = set()  # node ids folded into a fused node
-    # tensor id -> producing node (pre-fusion view)
-    producer = {tid: nd for nd in nodes for tid in nd.outputs}
     # position of a tensor's production in the topological order
     pos_of = {tid: i for i, nd in enumerate(nodes) for tid in nd.outputs}
     for tid in g.input_tensors:
@@ -116,7 +114,7 @@ def fuse(g: Graph) -> Graph:
 
             if out_tid != nd.outputs[0]:
                 alias[nd.outputs[0]] = out_tid
-            new = out.add_node(
+            out.add_node(
                 name=nd.name if op is nd.op else nd.name + "+add",
                 op=op,
                 inputs=[resolve(t) for t in nd.inputs],
@@ -131,7 +129,7 @@ def fuse(g: Graph) -> Graph:
         elif nd.op in _ACT_OPS:
             # Standalone activation after a non-fusable producer (e.g. Add
             # that could not fuse): keep as vector op.
-            new = out.add_node(
+            out.add_node(
                 name=nd.name, op=nd.op,
                 inputs=[resolve(t) for t in nd.inputs],
                 outputs=list(nd.outputs),
@@ -142,7 +140,7 @@ def fuse(g: Graph) -> Graph:
         elif nd.op in (OpType.ADD, OpType.MUL):
             # Unfused Add/Mul (both producers already consumed etc.) — vector
             # op with a second operand through the residual stream.
-            new = out.add_node(
+            out.add_node(
                 name=nd.name, op=nd.op,
                 inputs=[resolve(t) for t in nd.inputs],
                 outputs=list(nd.outputs),
@@ -151,7 +149,7 @@ def fuse(g: Graph) -> Graph:
                 attrs=dict(nd.attrs),
             )
         else:  # pools, layernorm, softmax, attention GEMMs, ...
-            new = out.add_node(
+            out.add_node(
                 name=nd.name, op=nd.op,
                 inputs=[resolve(t) for t in nd.inputs],
                 outputs=list(nd.outputs),

@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import heapq
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 from ..core.pu import PUSpec, URAM_BYTES
 from .graph import Graph, OpType
@@ -138,6 +138,39 @@ class WeightSchedule:
         for t in self.tiles:
             out[t.nid] = out.get(t.nid, 0) + t.dynamic_chunks
         return out
+
+    def rebound(self, nids: "list[int] | tuple[int, ...]") -> "WeightSchedule":
+        """A copy positionally re-keyed onto ``nids`` — valid when the new
+        segment's node shapes match this one's (same
+        :func:`segment_shape_key`), in which case tiling, allocation and
+        times are identical up to nid relabeling."""
+        if len(nids) != len(self.node_order):
+            raise ValueError("rebound() needs a same-length node segment")
+        mapping = dict(zip(self.node_order, nids))
+        return WeightSchedule(
+            tiles=[replace(t, nid=mapping[t.nid]) for t in self.tiles],
+            pu_kind=self.pu_kind,
+            capacity_bytes=self.capacity_bytes,
+            t_chunk_load=self.t_chunk_load,
+            node_order=list(nids),
+            node_exec={mapping[n]: v for n, v in self.node_exec.items()},
+            node_stream={mapping[n]: v for n, v in self.node_stream.items()},
+        )
+
+
+def segment_shape_key(g: Graph, nids: "list[int] | tuple[int, ...]") -> tuple:
+    """Shape signature of a node segment: exactly what ``schedule_weights``
+    reads per node (GEMM dims, weight bytes, attention stream-operand
+    bytes). Equal keys on the same PU kind yield identical schedules up to
+    nid relabeling — the basis of the analysis-level shape cache that makes
+    a 28-block transformer pay for one block's SMOF allocation."""
+    parts = []
+    for nid in nids:
+        nd = g.node_by_id(nid)
+        stream = (g.tensors[nd.inputs[1]].stream_bytes
+                  if nd.op in _ATTN_OPS else None)
+        parts.append((nd.m, nd.n, nd.k, nd.weight_bytes, stream))
+    return tuple(parts)
 
 
 def build_tiles(g: Graph, nids: list[int], pu: PUSpec) -> list[Tile]:

@@ -127,7 +127,6 @@ class ArchConfig:
         if self.family == "hybrid":
             di, N = self.d_inner, self.ssm_state
             per_mamba = d * (2 * di + 2 * N * 1 + self.ssm_heads) + di * d + di * (self.ssm_conv)
-            n_attn = self.num_layers // max(1, self.attn_every)
             shared = self.n_shared_attn * (per_attn + per_mlp)
             return emb + self.num_layers * per_mamba + shared
         return emb + self.num_layers * (per_attn + per_mlp)

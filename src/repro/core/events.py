@@ -37,11 +37,13 @@ class WaitCond(Effect):
 
     The predicate is re-checked on every notify; it must be side-effect free.
     If ``pred()`` is already true at yield time the process continues
-    immediately (same timestamp).
-    """
+    immediately (same timestamp). ``desc`` is an optional human-readable
+    description of what is being awaited (surfaced by
+    :class:`DeadlockError`)."""
 
     key: Any
     pred: Optional[Callable[[], bool]] = None
+    desc: Optional[str] = None
 
 
 @dataclass
@@ -54,6 +56,17 @@ class Acquire(Effect):
 class Release(Effect):
     sem: "Semaphore"
     n: int = 1
+
+
+class DeadlockError(RuntimeError):
+    """Raised when the event loop exceeds ``max_events``: a deadlock or
+    livelock. ``blocked`` lists ``(proc_name, description)`` for every
+    process still pending — for an ICU decoder blocked in a WAIT_* the
+    description names the instruction and its ``(pid, bid)`` channel."""
+
+    def __init__(self, message: str, blocked: list[tuple[str, str]]) -> None:
+        super().__init__(message)
+        self.blocked = blocked
 
 
 class Semaphore:
@@ -142,7 +155,14 @@ class Kernel:
                 break
             events += 1
             if events > max_events:
-                raise RuntimeError("simulation exceeded max_events (deadlock/livelock?)")
+                blocked = self.blocked_procs()
+                detail = "; ".join(f"{name}: {desc}" for name, desc in blocked)
+                raise DeadlockError(
+                    f"simulation exceeded max_events={max_events} "
+                    f"(deadlock/livelock?). {len(blocked)} blocked process(es)"
+                    + (f": {detail}" if detail else ""),
+                    blocked,
+                )
             self.now = ev.time
             self._step(ev.proc)
         return self.now
@@ -150,6 +170,23 @@ class Kernel:
     def deadlocked(self) -> list[_Proc]:
         """Processes still blocked after run() drained the heap."""
         return [p for p in self._procs if not p.done]
+
+    def blocked_procs(self) -> list[tuple[str, str]]:
+        """``(name, what-it-awaits)`` for every non-done process, using
+        the pending effect's own description where available."""
+        out: list[tuple[str, str]] = []
+        for p in self._procs:
+            if p.done:
+                continue
+            eff = p.pending
+            if isinstance(eff, WaitCond):
+                desc = eff.desc or f"WaitCond({eff.key!r})"
+            elif isinstance(eff, Acquire):
+                desc = f"Acquire({eff.sem.name or 'semaphore'})"
+            else:
+                desc = "runnable (livelock suspect)"
+            out.append((p.name, desc))
+        return out
 
     # -- internals ----------------------------------------------------------
     def _schedule(self, time: float, proc: _Proc) -> None:

@@ -147,13 +147,15 @@ class ICU:
                     if op is Opcode.WEIGHTS_ADM:
                         weights_issued += 1
                         self.kernel.spawn(
-                            self._async_adm(inst.length, inst.channel, kind="weights"),
+                            self._async_adm(inst.length, inst.channel,
+                                            kind="weights", addr=inst.cur_ba),
                             name=f"pu{self.spec.pid}.wadm",
                         )
                     else:  # RES_ADD_* : residual shortcut stream
                         self.res_issued += 1
                         self.kernel.spawn(
-                            self._async_adm(inst.length, inst.channel, kind="res"),
+                            self._async_adm(inst.length, inst.channel,
+                                            kind="res", addr=inst.cur_ba),
                             name=f"pu{self.spec.pid}.radm",
                         )
                 elif group is Group.LD:
@@ -169,6 +171,11 @@ class ICU:
                     st.buffer_wait += self.kernel.now - t0
                     total = self.spec.adm_sys_cycles(inst.length)
                     delta = min(total, self.spec.stream_tile_cycles(inst.length))
+                    self.kernel.log(
+                        f"pu{self.spec.pid}.LD",
+                        ("xfer", "r", inst.channel, inst.cur_ba, inst.length,
+                         self.kernel.now + total),
+                    )
                     yield Delay(delta)
                     self.ld_stream_ends.append(self.kernel.now + (total - delta))
                     yield Release(self.act_full)
@@ -206,6 +213,8 @@ class ICU:
                     yield WaitCond(
                         ("lut", self.spec.pid, inst.kind, key),
                         pred=lambda lut=lut, key=key: lut.get(key, 0) > 0,
+                        desc=(f"{op.name} on channel (src_pid={inst.pid}, "
+                              f"bid={inst.bid})"),
                     )
                     lut[key] -= 1  # clear the entry, barrier passed
                     st.sync_wait += self.kernel.now - t0
@@ -218,6 +227,8 @@ class ICU:
                 yield WaitCond(
                     ("weights", self.spec.pid),
                     pred=lambda t=gemm_wtarget: self.weights_done >= t,
+                    desc=(f"URAM weight interlock ({gemm_wtarget} cumulative "
+                          "chunk(s))"),
                 )
                 # Residual stream interlock.
                 if inst.add_enable:
@@ -225,6 +236,7 @@ class ICU:
                     yield WaitCond(
                         ("res", self.spec.pid),
                         pred=lambda t=tgt: self.res_done >= t,
+                        desc=f"residual stream interlock ({tgt} transfer(s))",
                     )
                 yield Acquire(self.act_full)  # consume one input slot
                 yield Acquire(self.out_free)  # claim one output slot
@@ -263,14 +275,23 @@ class ICU:
         yield Acquire(chan)
         st.buffer_wait += self.kernel.now - t0
         dur = self.spec.adm_sys_cycles(inst.length)
+        self.kernel.log(
+            f"pu{self.spec.pid}.ST",
+            ("xfer", "w", inst.channel, inst.cur_ba, inst.length,
+             self.kernel.now + dur),
+        )
         yield Delay(dur)
         st.busy += dur
         yield Release(chan)
 
-    def _async_adm(self, length: int, channel: int, kind: str):
+    def _async_adm(self, length: int, channel: int, kind: str, addr: int = 0):
         chan = self.hbm_channels[channel]
         yield Acquire(chan)
         dur = self.spec.adm_sys_cycles(length)
+        self.kernel.log(
+            f"pu{self.spec.pid}.CP",
+            ("xfer", "r", channel, addr, length, self.kernel.now + dur),
+        )
         yield Delay(dur)
         yield Release(chan)
         if kind == "weights":

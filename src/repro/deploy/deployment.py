@@ -201,6 +201,7 @@ def compile_deployment(
     rounds: Optional[int] = None,
     n_io: int = 4,
     n_channels: int = N_HBM_CHANNELS,
+    verify: bool = True,
 ) -> Deployment:
     """Compile any schedule-like ``strategy`` (see :meth:`Strategy.of`) into
     an executable deployment.
@@ -217,7 +218,15 @@ def compile_deployment(
     ``Workload.rounds``; an explicit ``rounds`` argument here; one full
     decode window for decode-phase graphs (``graph.decode_steps`` — one
     program round is one token, so a decode tenant runs a complete
-    advancing-length pass per measurement); ``DEFAULT_ROUNDS``."""
+    advancing-length pass per measurement); ``DEFAULT_ROUNDS``.
+
+    ``verify=True`` (the default) runs the static program verifier
+    (:mod:`repro.verify`) over every member's compiled programs — ISA lint,
+    sync-token deadlock-freedom, memory hazards, cross-member isolation —
+    and raises :class:`~repro.verify.VerificationError` (carrying the
+    structured :class:`~repro.verify.VerifyReport`) on any error-severity
+    diagnostic. Pass ``verify=False`` to skip (e.g. when intentionally
+    compiling a defective program for the mutation harness)."""
     strategy = Strategy.of(strategy).with_workload(g)
     unbound = [i for i, m in enumerate(strategy.members) if m.workload is None]
     if unbound:
@@ -258,4 +267,8 @@ def compile_deployment(
     dep = Deployment(strategy=strategy, members=members, pus=pus,
                      rounds=rounds)
     dep.assert_disjoint()
+    if verify:
+        from ..verify import verify_deployment
+
+        verify_deployment(dep).raise_if_failed()
     return dep

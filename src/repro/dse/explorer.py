@@ -15,8 +15,8 @@ processed by a disjoint PU subset with internal pipeline parallelism (hybrid
 parallelism). Schedule metrics: aggregated throughput, system latency (the
 slowest member), cumulative TOPS of assigned PUs. Member configs that are
 strictly Pareto-dominated at equal-or-lower PU cost are pruned from the
-composition (frontier- and DP-point-preserving at tolerance 0; see
-``_cost_dominated_configs``).
+composition (frontier- and DP-point-preserving at tolerance 0; margin-aware
+at tolerance > 0; see ``_cost_dominated_configs``).
 
 Step 3 — Pareto analysis (repro.dse.pareto; sort-based O(n log n) for the
 2-objective case) + application constraints.
@@ -45,7 +45,7 @@ from typing import Optional
 from ..compiler.compile import analyze, place
 from ..compiler.graph import Graph
 from ..core.pu import PUSpec, make_u50_system
-from .pareto import pareto_front, pareto_front_bruteforce
+from .pareto import _threshold, pareto_front, pareto_front_bruteforce
 
 PU1X_TOPS = 0.3072
 PU2X_TOPS = 0.6144
@@ -158,10 +158,12 @@ def _cost_dominated_configs(
     by_cfg: dict[tuple[int, int], SingleBatchPoint],
     *,
     use_latency: bool,
+    fps_margin: float = 0.0,
 ) -> set[tuple[int, int]]:
     """Member configs strictly dominated at equal-or-lower PU cost: another
     config uses no more PU1x and no more PU2x yet achieves *strictly* higher
-    fps (and, with ``use_latency``, no worse latency).
+    fps — by more than ``fps_margin`` — (and, with ``use_latency``, no worse
+    latency).
 
     Composing with such a config can never help: swapping in the dominating
     config yields a feasible schedule with the same batch and strictly
@@ -180,16 +182,52 @@ def _cost_dominated_configs(
     ``use_latency=True`` (single-model Step 2) additionally requires the
     dominating config not to worsen latency, since schedule latency is an
     objective there; ``use_latency=False`` (multi-tenant joint placements)
-    ignores latency because the joint frontier is over fps vectors only."""
+    ignores latency because the joint frontier is over fps vectors only.
+
+    ``fps_margin > 0`` is the tolerance-aware mode (see
+    ``enumerate_multi_batch``): with margin ``tolerance * T_max`` (``T_max``
+    the best achievable schedule throughput) every schedule containing a
+    pruned config has a kept swap-in counterpart *strictly beyond its
+    throughput tolerance threshold* at no worse latency — so the exact
+    frontier, every DP point, and the tolerant-frontier membership of every
+    kept schedule are preserved (the tolerant frontier of the pruned set is
+    the reference tolerant frontier restricted to kept schedules). Exact
+    set-equality of tolerant frontiers is unattainable for *any* engaged
+    config prune: schedule latency is a max over members, so another member
+    can mask the latency axis of the tolerance-dominance test."""
     dead: set[tuple[int, int]] = set()
     for c, p in by_cfg.items():
         for c2, q in by_cfg.items():
             if (c2 != c and c2[0] <= c[0] and c2[1] <= c[1]
-                    and q.fps > p.fps
+                    and q.fps > p.fps + fps_margin
                     and (not use_latency or q.latency <= p.latency)):
                 dead.add(c)
                 break
     return dead
+
+
+def _max_schedule_throughput(
+    by_cfg: dict[tuple[int, int], SingleBatchPoint],
+    n_pu1x: int,
+    n_pu2x: int,
+) -> float:
+    """Best achievable total fps of any multi-batch schedule under the PU
+    budget (unbounded 2-D knapsack over member configs). Upper-bounds every
+    composed schedule's throughput — the normalizer that turns the relative
+    Pareto ``tolerance`` into the absolute ``fps_margin`` of
+    ``_cost_dominated_configs``."""
+    dp = [[0.0] * (n_pu2x + 1) for _ in range(n_pu1x + 1)]
+    for (a, b), p in by_cfg.items():
+        if p.fps <= 0.0:
+            continue
+        for ra in range(a, n_pu1x + 1):
+            row = dp[ra]
+            src = dp[ra - a]
+            for rb in range(b, n_pu2x + 1):
+                cand = src[rb - b] + p.fps
+                if cand > row[rb]:
+                    row[rb] = cand
+    return dp[n_pu1x][n_pu2x]
 
 
 def enumerate_multi_batch(
@@ -198,16 +236,28 @@ def enumerate_multi_batch(
     n_pu1x: int = 5,
     n_pu2x: int = 5,
     prune: bool = True,
+    tolerance: float = 0.0,
 ) -> list[MultiBatchSchedule]:
     """Step 2: all unordered combinations under the PU resource constraint.
 
     ``prune=True`` drops member configs that are strictly dominated at
     equal-or-lower cost before composing (see ``_cost_dominated_configs``) —
-    pass ``prune=False`` for the exhaustive brute-force composition."""
+    pass ``prune=False`` for the exhaustive brute-force composition.
+
+    ``tolerance`` is the Pareto tolerance of the downstream frontier
+    extraction: at ``tolerance > 0`` the dominance test demands an fps
+    margin of ``tolerance * T_max`` so pruning stays engaged without
+    touching the exact frontier, the DP points, or the tolerant-frontier
+    membership of any kept schedule (a dropped schedule always has a kept
+    counterpart more than ``tolerance`` ahead in throughput at no worse
+    latency)."""
     by_cfg = {p.config: p for p in points}
     cfgs = sorted(by_cfg)  # deterministic order for unordered enumeration
     if prune:
-        dead = _cost_dominated_configs(by_cfg, use_latency=True)
+        margin = (tolerance * _max_schedule_throughput(by_cfg, n_pu1x, n_pu2x)
+                  if tolerance > 0.0 else 0.0)
+        dead = _cost_dominated_configs(by_cfg, use_latency=True,
+                                       fps_margin=margin)
         cfgs = [c for c in cfgs if c not in dead]
     schedules: list[MultiBatchSchedule] = []
 
@@ -467,13 +517,15 @@ def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
     whose graphs have identical content (by fingerprint) share one — joint
     placements give each tenant one disjoint (a, b) member pipeline under
     the shared PU budget, and the returned frontier is Pareto-optimal in the
-    vector of per-tenant rates (tenant-A fps, tenant-B fps, ...). At
-    tolerance 0 the joint recursion prunes per-tenant configs that are
-    strictly fps-dominated at equal-or-lower cost and abandons partial
-    placements whose best-case completion (each remaining tenant granted the
-    whole remaining budget) is already strictly dominated — both are
-    frontier-preserving; ``engine="reference"`` disables them and runs the
-    brute-force engine.
+    vector of per-tenant rates (tenant-A fps, tenant-B fps, ...). The joint
+    recursion abandons partial placements whose best-case completion (each
+    remaining tenant granted the whole remaining budget) is already
+    dominated beyond the tolerance threshold by a found placement — exactly
+    frontier-preserving at any tolerance >= 0; at tolerance 0 it
+    additionally pre-prunes per-tenant configs that are strictly
+    fps-dominated at equal-or-lower cost (sound only under exact dominance:
+    the other tenants' unchanged rates mask any margin version).
+    ``engine="reference"`` disables both and runs the brute-force engine.
 
     ``validate=N`` deploys + simulates up to N joint placements (the
     max-min-fair ``balanced`` point first, then the frontier by normalized
@@ -492,9 +544,16 @@ def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
         raise ValueError("explore_multi needs at least two tenant graphs")
     pus = pus if pus is not None else make_u50_system()
     fast = engine == "fast"
-    # pruning is frontier-preserving only under exact dominance; a nonzero
-    # Pareto tolerance admits near-dominated points, so sweep exhaustively.
-    prune = fast and tolerance == 0.0
+    # The per-tenant config pre-prune is sound only under exact dominance:
+    # swapping one tenant's config leaves every *other* tenant's rate
+    # unchanged, and a tolerant dominator must clear the threshold on every
+    # component — masked axes make a margin version impossible. The
+    # incumbent bound below, by contrast, is margin-aware and stays engaged
+    # at any tolerance >= 0 (an incumbent clearing the tolerance-scaled
+    # threshold of an *optimistic* completion excludes every actual
+    # completion from the tolerant frontier — exactly frontier-preserving).
+    cfg_prune = fast and tolerance == 0.0
+    bound = fast and tolerance >= 0.0
 
     singles: list[list[SingleBatchPoint]] = []
     caches: list[dict[tuple[int, int], SingleBatchPoint]] = []
@@ -511,7 +570,7 @@ def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
 
     # Joint enumeration: one ordered config per tenant, disjoint PU budgets.
     points: list[MultiTenantPoint] = []
-    if prune:
+    if cfg_prune:
         cfg_lists = []
         for cache in caches:
             dead = _cost_dominated_configs(cache, use_latency=False)
@@ -534,10 +593,10 @@ def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
             if b == -math.inf:
                 return True
             opt.append(b)
-        if not prune:
+        if not bound:
             return False
         for inc in incumbents:
-            if (all(x >= o for x, o in zip(inc, opt))
+            if (all(x >= _threshold(o, tolerance) for x, o in zip(inc, opt))
                     and any(x > o for x, o in zip(inc, opt))):
                 return True
         return False
@@ -567,7 +626,7 @@ def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
                     tops=sum(m.tops for m in members),
                 )
             )
-            if prune:
+            if bound:
                 note_incumbent(fps)
             return
         if bounded_out(i, rem_a, rem_b, got):
@@ -642,10 +701,14 @@ def explore(g, *, n_pu1x: int = 5, n_pu2x: int = 5,
     The default ``engine="fast"`` shares one memoized graph analysis across
     all Step-1 configs, generates **zero** instructions (codegen runs only
     when a point is deployed), prunes cost-dominated member configs from the
-    Step-2 composition when ``tolerance == 0``, and extracts the frontier
-    with the sort-based O(n log n) Pareto. ``engine="reference"`` is the
-    pre-caching brute-force engine; both produce identical frontiers and
-    design points (locked by the equivalence suite in tests/test_dse.py).
+    Step-2 composition (margin-aware at ``tolerance > 0``, see
+    ``enumerate_multi_batch``), and extracts the frontier with the
+    sort-based O(n log n) Pareto. ``engine="reference"`` is the pre-caching
+    brute-force engine; at tolerance 0 both produce identical frontiers and
+    design points, at tolerance > 0 the fast frontier is the reference one
+    restricted to kept schedules and still contains the entire exact
+    frontier and every DP point (locked by the equivalence suite in
+    tests/test_dse.py).
 
     ``validate=N`` deploys + simulates up to N schedules (the design points
     DP-A/C/B first, then the throughput-ordered multi-batch frontier) and
@@ -665,10 +728,13 @@ def explore(g, *, n_pu1x: int = 5, n_pu2x: int = 5,
     fast = engine == "fast"
     enum = enumerate_single_batch if fast else enumerate_single_batch_reference
     single = enum(g, n_pu1x=n_pu1x, n_pu2x=n_pu2x, pus=pus)
-    # pruning is frontier-preserving only under exact dominance; a nonzero
-    # Pareto tolerance admits near-dominated points, so sweep exhaustively.
+    # margin-aware pruning stays engaged at tolerance > 0 (see
+    # enumerate_multi_batch); a negative tolerance shrinks the frontier and
+    # would make any prune unsound, so only that degenerate case sweeps
+    # exhaustively.
     multi = enumerate_multi_batch(single, n_pu1x=n_pu1x, n_pu2x=n_pu2x,
-                                  prune=fast and tolerance == 0.0)
+                                  prune=fast and tolerance >= 0.0,
+                                  tolerance=tolerance)
     front = pareto_front if fast else pareto_front_bruteforce
     sf = front(
         single, [lambda p: p.fps, lambda p: -p.latency], tolerance=tolerance

@@ -120,7 +120,6 @@ def parse_module(text: str) -> tuple[dict[str, Computation], str]:
     current: Computation | None = None
     entry = ""
     for line in text.splitlines():
-        m = _COMP_START_RE.match(line.strip()) if line and not line.startswith(" ") else None
         if line.startswith("ENTRY") or (line and not line[0].isspace() and "->" in line and line.rstrip().endswith("{")):
             m2 = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", line.strip())
             if m2:

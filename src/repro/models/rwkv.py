@@ -22,7 +22,6 @@ LORA_R = 32  # low-rank dim for the dynamic mix / decay projections
 
 def init_rwkv(key, cfg: ArchConfig, dtype) -> dict:
     d, f = cfg.d_model, cfg.d_ff
-    H = d // cfg.ssm_head_dim
     ks = jax.random.split(key, 16)
     s = 1.0 / math.sqrt(d)
     return {
@@ -69,7 +68,6 @@ def _decay(p, xw):
 
 def _group_norm(y, scale, H, eps=64e-5):
     """Head-wise normalization of the wkv output."""
-    b = y.shape[0]
     yh = y.reshape(*y.shape[:-1], H, -1).astype(jnp.float32)
     mu = jnp.mean(yh, axis=-1, keepdims=True)
     var = jnp.var(yh, axis=-1, keepdims=True)

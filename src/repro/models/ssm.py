@@ -24,7 +24,6 @@ def init_mamba(key, cfg: ArchConfig, dtype) -> dict:
     di = cfg.d_inner
     N = cfg.ssm_state
     H = cfg.ssm_heads
-    P = cfg.ssm_head_dim
     ks = jax.random.split(key, 6)
     s = 1.0 / math.sqrt(d)
     conv_dim = di + 2 * N

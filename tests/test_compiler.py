@@ -474,7 +474,6 @@ class TestMemoryOptimization:
     def test_cross_stage_tensor_gets_pingpong(self):
         f, prof, p = self._partition(zoo.linear_chain(8), 2, 0)
         plans = buffer_requirements(f, p, n_io=4)
-        stage_of = p.stage_of_node()
         boundary = [
             plan
             for tid, plan in plans.items()

@@ -14,7 +14,7 @@ try:
 except ImportError:
     HAVE_HYPOTHESIS = False
 
-from repro.compiler import STATS, clear_analysis_cache, zoo
+from repro.compiler import STATS, analyze, clear_analysis_cache, place, schedule_weights, zoo
 from repro.dse import (
     constrained,
     explore,
@@ -210,21 +210,43 @@ class TestFastEngineEquivalence:
         assert fast.dp_b == ref.dp_b
         assert fast.dp_c == ref.dp_c
 
-    def test_explore_identical_with_tolerance(self):
+    @pytest.mark.parametrize("tol", [0.02, 0.1])
+    def test_explore_identical_with_tolerance(self, tol):
+        """Margin-aware Step-2 pruning stays engaged at tolerance > 0 and
+        preserves: the single-point sweep, the exact frontier, every DP
+        point, and the tolerant-frontier membership of every kept schedule
+        (the fast frontier is the reference one restricted to kept
+        schedules)."""
         g = _graphs_under_test()[0]
-        fast = explore(g, tolerance=0.02)
-        ref = explore(g, engine="reference", tolerance=0.02)
-        # a nonzero tolerance disables Step-2 pruning, so the full schedule
-        # list matches too
-        assert fast.multi == ref.multi
+        fast = explore(g, tolerance=tol)
+        ref = explore(g, engine="reference", tolerance=tol)
+        assert fast.single == ref.single
         assert fast.single_frontier == ref.single_frontier
-        assert fast.multi_frontier == ref.multi_frontier
+        kept = {s.configs for s in fast.multi}
+        assert kept <= {s.configs for s in ref.multi}
+        exact = pareto_front_bruteforce(
+            ref.multi, [lambda s: s.throughput, lambda s: -s.latency],
+            tolerance=0.0)
+        assert all(s.configs in kept for s in exact)
+        assert fast.multi_frontier == [
+            s for s in ref.multi_frontier if s.configs in kept]
+        assert fast.dp_a == ref.dp_a
+        assert fast.dp_b == ref.dp_b
+        assert fast.dp_c == ref.dp_c
 
-    def test_explore_multi_identical(self):
+    @pytest.mark.parametrize("tol", [0.0, 0.05])
+    def test_explore_multi_identical(self, tol):
+        """The margin-aware incumbent bound is exactly frontier-preserving
+        at any tolerance: an incumbent clearing the tolerance-scaled
+        threshold of an optimistic completion excludes every actual
+        completion from the tolerant frontier."""
         pair = _graphs_under_test()
-        fast = explore_multi(pair)
-        ref = explore_multi(pair, engine="reference")
-        assert fast.frontier == ref.frontier
+        fast = explore_multi(pair, tolerance=tol)
+        ref = explore_multi(pair, engine="reference", tolerance=tol)
+        assert ({p.configs for p in fast.frontier}
+                == {p.configs for p in ref.frontier})
+        assert sorted(p.fps for p in fast.frontier) == sorted(
+            p.fps for p in ref.frontier)
         assert fast.balanced == ref.balanced
         assert [s for s in fast.singles] == [s for s in ref.singles]
         # pruned points are a subset, in enumeration order
@@ -263,6 +285,50 @@ class TestFastEngineEquivalence:
         pruned = enumerate_multi_batch(pts, n_pu1x=2, n_pu2x=2, prune=True)
         assert not any((2, 1) in s.configs for s in pruned)
 
+    def test_tolerance_margin_prune(self):
+        """At tolerance > 0 the dominance test demands an fps margin of
+        tolerance * T_max: near-dominated configs (within the margin)
+        survive, far-dominated ones are still pruned, and the pruned set's
+        tolerant frontier is the brute-force frontier restricted to kept
+        schedules while containing the entire exact frontier."""
+        from repro.dse import SingleBatchPoint, enumerate_multi_batch
+        from repro.dse.explorer import _max_schedule_throughput
+
+        tol = 0.05
+        pts = [
+            SingleBatchPoint(a=1, b=0, fps=100.0, latency=0.010, tops=0.3, pbe=1.0),
+            # dominated by (1,0) but within the margin -> must survive
+            SingleBatchPoint(a=1, b=1, fps=96.0, latency=0.010, tops=0.9, pbe=0.5),
+            # dominated by far more than the margin -> still pruned
+            SingleBatchPoint(a=2, b=0, fps=40.0, latency=0.010, tops=0.6, pbe=0.4),
+            SingleBatchPoint(a=0, b=1, fps=60.0, latency=0.015, tops=0.6, pbe=1.0),
+        ]
+        by_cfg = {p.config: p for p in pts}
+        t_max = _max_schedule_throughput(by_cfg, 2, 2)
+        assert t_max == pytest.approx(320.0)  # 2x(1,0) + 2x(0,1)
+        margin = tol * t_max  # 16.0: (1,1) is 4.0 behind, (2,0) is 60.0
+        assert 100.0 - 96.0 < margin < 100.0 - 40.0
+
+        pruned = enumerate_multi_batch(pts, n_pu1x=2, n_pu2x=2,
+                                       prune=True, tolerance=tol)
+        brute = enumerate_multi_batch(pts, n_pu1x=2, n_pu2x=2, prune=False)
+        assert any((1, 1) in s.configs for s in pruned)
+        assert not any((2, 0) in s.configs for s in pruned)
+        # at tolerance 0 the same config would be margin-0 pruned
+        exact_pruned = enumerate_multi_batch(pts, n_pu1x=2, n_pu2x=2,
+                                             prune=True, tolerance=0.0)
+        assert not any((1, 1) in s.configs for s in exact_pruned)
+
+        objs = [lambda s: s.throughput, lambda s: -s.latency]
+        kept = {s.configs for s in pruned}
+        assert kept <= {s.configs for s in brute}
+        exact = pareto_front_bruteforce(brute, objs, tolerance=0.0)
+        assert all(s.configs in kept for s in exact)
+        ref_front = pareto_front_bruteforce(brute, objs, tolerance=tol)
+        fast_front = pareto_front(pruned, objs, tolerance=tol)
+        assert [s.configs for s in fast_front] == [
+            s.configs for s in ref_front if s.configs in kept]
+
 
 class TestLazyCompile:
     """Exploration never generates a single instruction; codegen happens at
@@ -294,6 +360,33 @@ class TestLazyCompile:
         # identical content -> one shared Step-1 cache and one analysis
         assert snap["analysis_misses"] == 1
         assert snap["fuse_calls"] == 1
+
+    def test_weight_schedule_shape_cache(self):
+        """Shape-equal segments share one SMOF allocation — within a graph
+        (repeated transformer blocks) and across depth-scaled variants."""
+        from repro.core.pu import make_u50_system
+
+        clear_analysis_cache()
+        STATS.reset()
+        pus = make_u50_system()
+        a2 = analyze(zoo.transformer_encoder(depth=2, seq_len=128), pus)
+        place(a2, 2, 2)
+        hits_d2 = STATS.weight_schedule_shape_hits
+        assert hits_d2 >= 1  # repeated blocks hit within one graph
+        a4 = analyze(zoo.transformer_encoder(depth=4, seq_len=128), pus)
+        place(a4, 2, 2)
+        # the depth-4 variant reuses the depth-2 graph's segment shapes
+        assert STATS.weight_schedule_shape_hits > hits_d2
+        # a rebound schedule is identical to one computed from scratch
+        for an in (a2, a4):
+            for (nids, kind), ws in an._wscheds.items():
+                fresh = schedule_weights(an.graph, list(nids),
+                                         an.pu_kinds[kind])
+                assert [(t.nid, t.tile_idx, t.n_chunks, t.static_chunks)
+                        for t in ws.tiles] == \
+                       [(t.nid, t.tile_idx, t.n_chunks, t.static_chunks)
+                        for t in fresh.tiles]
+                assert ws.total_stall() == pytest.approx(fresh.total_stall())
 
     def test_deployed_points_still_simulate(self):
         res = explore(zoo.tiny_cnn(channels=(16, 32, 32), hw=16))

@@ -1,0 +1,291 @@
+"""Static program verification: clean zoo proofs + defect cross-validation.
+
+Two directions, matching ROADMAP "Program verification":
+
+* *soundness in practice* — every zoo model class (CNN, ViT, encoder,
+  decoder, multi-tenant) compiles verifier-clean AND simulates to
+  completion, so a clean report predicts a live deployment;
+* *sensitivity* — each defect class of :mod:`repro.verify.mutate` is both
+  statically caught (typed diagnostic) and dynamically confirmed (deadlock,
+  trace-level corruption, or timing divergence) with verification bypassed.
+
+With hypothesis installed the clean-compile property also runs over
+randomized configs/rounds; without it those tests skip and the exhaustive
+example grids below keep the same claims alive.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.compiler import zoo
+from repro.core.events import Delay, Kernel, DeadlockError, WaitCond
+from repro.core.isa import Sync
+from repro.core.simulator import MultiPUSimulator
+from repro.deploy import Strategy, Workload, compile_deployment
+from repro.verify import Code, check_isolation, verify_deployment, verify_programs
+from repro.verify.mutate import (
+    drop_send_ack,
+    hijack_channel,
+    overflow_field,
+    runtime_hazards,
+    shrink_region,
+    simulate_raw,
+    stale_reads,
+    swap_bids,
+    verify_mutation,
+)
+
+# name -> (graph factory, (a, b) config, rounds) spanning every model class.
+ZOO_TARGETS = {
+    "tiny_cnn": (lambda: zoo.tiny_cnn(), (2, 1), 4),
+    "resnet50": (lambda: zoo.resnet50(input_hw=64), (3, 3), 2),
+    "vit": (lambda: zoo.vit(input_hw=64, depth=2), (2, 2), 2),
+    "encoder": (lambda: zoo.transformer_encoder(seq_len=64, depth=2),
+                (2, 2), 2),
+    # rounds=None -> one full decode window (8 token steps)
+    "decoder": (lambda: zoo.transformer_decoder(seq_len=64, depth=2,
+                                                decode_steps=8),
+                (2, 2), None),
+}
+
+
+def _deploy(name):
+    build, cfg, rounds = ZOO_TARGETS[name]
+    return compile_deployment(build(), Strategy.of(cfg), rounds=rounds)
+
+
+# --------------------------------------------------------------- clean zoo --
+class TestCleanZoo:
+    """Verifier-clean programs simulate to completion (soundness witness)."""
+
+    @pytest.mark.parametrize("name", sorted(ZOO_TARGETS))
+    def test_clean_and_simulates(self, name):
+        dep = _deploy(name)  # verify=True default: raises if not clean
+        rep = verify_deployment(dep)
+        assert rep.ok, rep.summary()
+        res, trace = simulate_raw(dep.programs(), dep.pus, trace=True)
+        assert not res.deadlocked
+        assert res.end_cycles > 0
+        assert not runtime_hazards(trace)
+        assert not stale_reads(trace)
+
+    def test_multi_tenant_clean(self):
+        strat = Strategy.tenants([
+            (Workload(zoo.tiny_cnn(), "cnn"), 1, 1),
+            (Workload(zoo.transformer_encoder(seq_len=64, depth=2), "enc"),
+             1, 1),
+        ])
+        dep = compile_deployment(None, strat, rounds=4)
+        rep = verify_deployment(dep)
+        assert rep.ok, rep.summary()
+        member_of = {p.pid: m.index for m in dep.members
+                     for p in m.compiled.programs}
+        res, trace = simulate_raw(dep.programs(), dep.pus, trace=True)
+        assert not res.deadlocked
+        assert not runtime_hazards(trace, member_of=member_of)
+        assert not stale_reads(trace)
+
+
+# ---------------------------------------------------- defect cross-checks --
+@pytest.fixture(scope="module")
+def cnn_dep():
+    return _deploy("tiny_cnn")
+
+
+@pytest.fixture(scope="module")
+def enc_dep():
+    build, cfg, _ = ZOO_TARGETS["encoder"]
+    return compile_deployment(build(), Strategy.of(cfg), rounds=8)
+
+
+def _bundle(dep):
+    m = dep.members[0]
+    return m.compiled.programs, m.compiled.mem, m.compiled.pu_specs
+
+
+class TestMutationDefects:
+    """Each planted defect class: statically caught AND dynamically real."""
+
+    def test_drop_send_ack(self, cnn_dep):
+        programs, mem, specs = _bundle(cnn_dep)
+        mut = drop_send_ack(programs)
+        rep = verify_mutation(mut, mem=mem, pu_specs=specs)
+        assert not rep.ok
+        assert rep.has(Code.SYNC_TOKEN_STARVE)
+        assert rep.has(Code.HAZ_UNGUARDED_READ)
+        res, _ = simulate_raw(mut.programs, cnn_dep.pus)
+        assert res.deadlocked
+
+    def test_drop_send_ack_deadlock_names_channel(self, cnn_dep):
+        # S1: the event kernel's blocked-process report names the parked
+        # WAIT instruction and its (pid, bid) channel.
+        programs, _, _ = _bundle(cnn_dep)
+        mut = drop_send_ack(programs)
+        sim = MultiPUSimulator(cnn_dep.pus)
+        res = sim.run(mut.programs)
+        assert res.deadlocked
+        blocked = sim.kernel.blocked_procs()
+        assert blocked
+        assert any("channel (src_pid=" in desc for _, desc in blocked)
+
+    def test_swap_bids(self, cnn_dep):
+        programs, mem, specs = _bundle(cnn_dep)
+        mut = swap_bids(programs)
+        rep = verify_mutation(mut, mem=mem, pu_specs=specs)
+        assert not rep.ok
+        assert rep.has(Code.HAZ_BID_MISMATCH)
+        assert rep.has(Code.SYNC_STALL) or rep.has(Code.SYNC_TOKEN_STARVE)
+        res, _ = simulate_raw(mut.programs, cnn_dep.pus)
+        assert res.deadlocked
+
+    def test_shrink_region(self, enc_dep):
+        programs, mem, specs = _bundle(enc_dep)
+        eligible = [p.tid for p in sorted(mem.tensors.values(),
+                                          key=lambda p: p.tid)
+                    if p.kind == "intermediate" and p.beta > 1]
+        assert eligible
+        # Statically every collapsed ping-pong is flagged; dynamically the
+        # corruption only manifests on a tensor whose producer runs a round
+        # ahead — scan for one (tid 7 is a known witness, try it first).
+        manifested = False
+        for tid in sorted(eligible, key=lambda t: t != 7):
+            mut = shrink_region(programs, mem, tid=tid)
+            rep = verify_mutation(mut, mem=mem, pu_specs=specs)
+            assert not rep.ok
+            assert rep.has(Code.HAZ_PINGPONG)
+            _, trace = simulate_raw(mut.programs, enc_dep.pus, trace=True)
+            if stale_reads(trace):
+                manifested = True
+                break
+        assert manifested, "no shrunk tensor produced a stale read at runtime"
+
+    def test_overflow_field(self, cnn_dep):
+        programs, mem, specs = _bundle(cnn_dep)
+        mut, truncated = overflow_field(programs)
+        rep = verify_mutation(mut, mem=mem, pu_specs=specs)
+        assert not rep.ok
+        assert rep.has(Code.LINT_FIELD_OVERFLOW)
+        # Hardware would wrap the field: the intended and the truncated
+        # images compute different GEMMs, visible as timing divergence.
+        res_i, _ = simulate_raw(mut.programs, cnn_dep.pus)
+        res_t, _ = simulate_raw(truncated, cnn_dep.pus)
+        assert res_i.end_cycles != res_t.end_cycles
+
+    def test_hijack_channel(self):
+        strat = Strategy.tenants([
+            (Workload(zoo.tiny_cnn(), "cnn"), 1, 1),
+            (Workload(zoo.transformer_encoder(seq_len=64, depth=2), "enc"),
+             1, 1),
+        ])
+        dep = compile_deployment(None, strat, rounds=4)
+        per_member = [m.compiled.programs for m in dep.members]
+        muts, detail = hijack_channel(per_member)
+        assert "redirected" in detail
+        rep = check_isolation([
+            (f"m{m.index}", progs, m.compiled.mem)
+            for m, progs in zip(dep.members, muts)
+        ])
+        assert not rep.ok
+        assert rep.has(Code.HAZ_CHANNEL_SHARED)
+        assert rep.has(Code.HAZ_MEMBER_OVERLAP)
+        member_of = {p.pid: m.index
+                     for m, progs in zip(dep.members, muts) for p in progs}
+        merged = [p for progs in muts for p in progs]
+        _, trace = simulate_raw(merged, dep.pus, trace=True)
+        assert runtime_hazards(trace, member_of=member_of)
+
+
+# ----------------------------------------------------- deletion coverage --
+def _sync_sites(programs):
+    sites = []
+    for pi, pu in enumerate(programs):
+        for gname in ("ld", "cp", "st"):
+            prog = getattr(pu, gname)
+            for idx in range(prog.progctrl.icu_ba, len(prog.instructions)):
+                if isinstance(prog.instructions[idx], Sync):
+                    sites.append((pi, gname, idx))
+    return sites
+
+
+def _delete_site(programs, site):
+    pi, gname, idx = site
+    muts = [p.clone() for p in programs]
+    del getattr(muts[pi], gname).instructions[idx]
+    return muts
+
+
+class TestSyncDeletionCoverage:
+    """Deleting ANY loop-body handshake instruction is an error.
+
+    This is the stress property behind the named mutators: no single SEND
+    or WAIT in the steady state is redundant, and the verifier knows it —
+    including the multi-consumer forks where the store still *looks*
+    guarded but one consumer no longer throttles the producer."""
+
+    def test_every_sync_deletion_caught(self, cnn_dep):
+        programs, mem, specs = _bundle(cnn_dep)
+        sites = _sync_sites(programs)
+        assert len(sites) >= 8
+        uncaught = [
+            site for site in sites
+            if verify_programs(_delete_site(programs, site),
+                               mem=mem, pu_specs=specs).ok
+        ]
+        assert not uncaught
+
+
+class TestDeadlockDiagnostics:
+    """S1: DeadlockError carries structured blocked-process data."""
+
+    def test_max_events_names_blocked_wait(self):
+        k = Kernel()
+
+        def parked():
+            yield WaitCond("never-signalled",
+                           desc="WAIT_ACK on channel (src_pid=1, bid=5)")
+
+        def ticker():
+            while True:
+                yield Delay(1.0)
+
+        k.spawn(parked(), name="pu0.ST.icu")
+        k.spawn(ticker(), name="ticker")
+        with pytest.raises(DeadlockError) as ei:
+            k.run(max_events=50)
+        err = ei.value
+        assert ("pu0.ST.icu", "WAIT_ACK on channel (src_pid=1, bid=5)") \
+            in err.blocked
+        assert "pu0.ST.icu" in str(err)
+        assert "(src_pid=1, bid=5)" in str(err)
+
+
+# ------------------------------------------------------------ properties --
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+class TestProperties:
+    if HAVE_HYPOTHESIS:
+
+        @given(a=st.integers(1, 2), b=st.integers(1, 2),
+               rounds=st.integers(1, 4))
+        @settings(max_examples=8, deadline=None)
+        def test_clean_compile_simulates(self, a, b, rounds):
+            dep = compile_deployment(zoo.tiny_cnn(), Strategy.of((a, b)),
+                                     rounds=rounds)
+            assert verify_deployment(dep).ok
+            res, _ = simulate_raw(dep.programs(), dep.pus)
+            assert not res.deadlocked
+            assert res.rounds == rounds
+
+        @given(data=st.data())
+        @settings(max_examples=16, deadline=None)
+        def test_random_sync_deletion_caught(self, data):
+            dep = _deploy("tiny_cnn")
+            programs, mem, specs = _bundle(dep)
+            sites = _sync_sites(programs)
+            site = data.draw(st.sampled_from(sites))
+            muts = _delete_site(programs, site)
+            assert not verify_programs(muts, mem=mem, pu_specs=specs).ok
