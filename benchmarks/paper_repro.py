@@ -367,13 +367,19 @@ def ci_points() -> list[dict]:
          [(2, 2), (3, 3)], 5, 0.06),
         ("qwen3_enc.dp_a", zoo.transformer_encoder("qwen3-0.6b", seq_len=64,
                                                    depth=1), (2, 2), 5, 0.08),
+        # decode points tightened 10% -> 5% with the pipeline coupling model
+        # (residual serialization, HBM port contention, credit-loop bound)
         ("qwen3_dec.dp_a", zoo.transformer_decoder("qwen3-0.6b", seq_len=64,
                                                    decode_steps=8, depth=4),
-         (5, 5), None, 0.10),
+         (5, 5), None, 0.05),
         ("qwen3_dec_reduced.dp_c",
          zoo.transformer_decoder(get_config("qwen3-0.6b").reduced(),
                                  seq_len=64, decode_steps=8, depth=4),
-         dp_c, None, 0.10),
+         dp_c, None, 0.05),
+        # ten single-node tiny stages: the credit loop binds here — the
+        # uncoupled model used to run 15-20% hot on this shape
+        ("deep_chain.dp_a", zoo.linear_chain(10, ch=8, hw=8),
+         (5, 5), 10, 0.03),
     ]
     points = []
     for name, g, strategy, rounds, tol in plan:

@@ -141,14 +141,21 @@ def generate_programs(
                     ctx.ld.append(_sync(Opcode.SEND_ACK, src, plan))
                     _prologue_acks(ctx.ld_prologue, src, plan)
 
-            # output store
-            out_tid = nd.outputs[0]
-            oplan = mem.tensors[out_tid]
-            otinfo = g.tensors[out_tid]
-            consumers = [c for c in g.consumers_of(out_tid) if c.nid in stage_of]
-            if oplan.kind == "output" or not consumers:
-                _emit_write(ctx.st, oplan, otinfo)
-            else:
+            # output stores — every output tensor is written (and, unless it
+            # is a graph output, handshaken) per round, matching the
+            # profiler's instruction_counts / store-byte accounting.
+            for i, out_tid in enumerate(nd.outputs):
+                # Broadcast store: one compute result drains to several HBM
+                # tensors; every transfer but the node's last HOLDs the
+                # output-buffer slot (re-reading it) so the slot accounting
+                # stays one-per-compute.
+                hold = i < len(nd.outputs) - 1
+                oplan = mem.tensors[out_tid]
+                otinfo = g.tensors[out_tid]
+                consumers = [c for c in g.consumers_of(out_tid) if c.nid in stage_of]
+                if oplan.kind == "output" or not consumers:
+                    _emit_write(ctx.st, oplan, otinfo, hold=hold)
+                    continue
                 cons_pids = [pid_map[stage_of[c.nid]] for c in consumers]
                 for cpid in cons_pids:
                     ctx.st.append(_wait(Opcode.WAIT_ACK, cpid, oplan))
@@ -156,7 +163,7 @@ def generate_programs(
                 for cpid in cons_pids:
                     if cpid == pid:
                         ctx.st.append(_sync(Opcode.SEND_REQ, cpid, oplan))
-                _emit_write(ctx.st, oplan, otinfo)
+                _emit_write(ctx.st, oplan, otinfo, hold=hold)
                 for cpid in cons_pids:
                     if cpid != pid:
                         ctx.st.append(_sync(Opcode.SEND_REQ, cpid, oplan))
@@ -295,7 +302,7 @@ def _emit_read(body: list[Instruction], nd: Node, plan: TensorPlan) -> None:
 
 
 def _emit_write(body: list[Instruction], plan: TensorPlan,
-                tinfo=None) -> None:
+                tinfo=None, hold: bool = False) -> None:
     if tinfo is not None and tinfo.is_kv_cache:
         # append-only K/V region: one row per round, the address advancing
         # from the end of the prefill prefix across the decode window, then
@@ -305,12 +312,13 @@ def _emit_write(body: list[Instruction], plan: TensorPlan,
         steps = tinfo.kv_steps
         body.append(
             DataMove(op=Opcode.LINEAR_ADM, cur_ba=ba, length=row,
-                     channel=plan.write_channel)
+                     channel=plan.write_channel, hold=hold)
         )
         body.append(AddrCyc(ba=ba, aoffs=row, nc=steps - 1, ic=steps - 1))
         return
     body.append(
         DataMove(op=Opcode.LINEAR_ADM, cur_ba=plan.base_addr,
-                 length=plan.region_bytes, channel=plan.write_channel)
+                 length=plan.region_bytes, channel=plan.write_channel,
+                 hold=hold)
     )
     body.append(_addrcyc(plan))

@@ -36,6 +36,7 @@ from typing import Optional
 from ..core.program import PUProgram
 from ..core.pu import PUSpec, make_u50_system
 from .codegen import generate_programs
+from .coupling import CouplingModel, couple
 from .fusion import fuse
 from .graph import Graph
 from .memory import MemoryPlan, assign_channels, buffer_requirements
@@ -139,7 +140,8 @@ class GraphAnalysis:
         return extra
 
 
-# graph-fingerprint -> GraphAnalysis memo (bounded; insertion-order eviction)
+# graph-fingerprint -> GraphAnalysis memo (bounded; LRU eviction — lookups
+# re-insert their key so the front of the dict is always the coldest entry)
 _ANALYSIS_CACHE: dict[tuple, GraphAnalysis] = {}
 _ANALYSIS_CACHE_MAX = 32
 
@@ -184,6 +186,10 @@ def analyze(
         hit = _ANALYSIS_CACHE.get(key)
         if hit is not None:
             STATS.analysis_hits += 1
+            # true LRU: re-insert on hit so eviction pops the coldest
+            # entry, not simply the oldest-inserted one
+            del _ANALYSIS_CACHE[key]
+            _ANALYSIS_CACHE[key] = hit
             return hit
     STATS.analysis_misses += 1
     kinds = {p.kind: p for p in pus}
@@ -224,6 +230,9 @@ class CompiledModel:
     # analytic model
     stage_times: dict[int, float]  # incl. weight-streaming stalls
     analysis: GraphAnalysis
+    # cross-stage credit-loop model (repro.compiler.coupling); None only for
+    # hand-built instances, which fall back to the uncoupled max-stage view
+    coupling: Optional[CouplingModel] = None
     n_pu1x: int = 0
     n_pu2x: int = 0
     # deferred-codegen context
@@ -264,6 +273,11 @@ class CompiledModel:
     # -- predicted performance (pre-simulation; the DSE cache) ---------------
     @property
     def predicted_round_time(self) -> float:
+        """Steady-state round period: the coupled credit-system rate (max of
+        the per-stage serial bounds and every cross-stage credit-loop bound),
+        not merely ``max(stage_times)``."""
+        if self.coupling is not None:
+            return self.coupling.round_seconds
         return max(self.stage_times.values()) if self.stage_times else 0.0
 
     @property
@@ -273,7 +287,10 @@ class CompiledModel:
 
     @property
     def predicted_latency(self) -> float:
-        return sum(self.stage_times.values())
+        lat = sum(self.stage_times.values())
+        if self.coupling is not None:
+            lat += self.coupling.forward_latency_seconds
+        return lat
 
     @property
     def used_tops(self) -> float:
@@ -284,7 +301,9 @@ class CompiledModel:
         )
 
     def pbe(self) -> float:
-        caps = {"PU1x": 1.0, "PU2x": 2.0}
+        # relative stage capacities from the PU specs themselves (peak_tops),
+        # so a non-default PU array weights its stages correctly
+        caps = {k: spec.peak_tops for k, spec in self.analysis.pu_kinds.items()}
         used = [s for s in self.part.stages if s.nids]
         tmax = self.predicted_round_time
         if not used or tmax == 0:
@@ -352,6 +371,15 @@ def place(
         wscheds[s.index] = analysis.weight_schedule(s.nids, s.pu_kind)
         stage_times[s.index] = s.time + analysis.stage_overhead(s.nids, s.pu_kind)
 
+    # Cross-stage credit-loop coupling (repro.compiler.coupling): buffer
+    # depths straight from the stage-distance analysis (cheap; the liveness/
+    # channel planning behind ``.mem`` stays deferred) and ISU token
+    # latencies on the *canonical* stage->pid assignment, so offset-placed
+    # multi-batch members predict identically to the DSE cache.
+    plans = buffer_requirements(fused, part, n_io=n_io)
+    coupling = couple(fused, part, plans, stage_times,
+                      assign_pids(part, pus), {p.pid: p for p in pus})
+
     if pid_offset:
         skip = dict(pid_offset)
         pool = []
@@ -375,6 +403,7 @@ def place(
         rounds=rounds,
         stage_times=stage_times,
         analysis=analysis,
+        coupling=coupling,
         n_pu1x=n_pu1x,
         n_pu2x=n_pu2x,
         n_io=n_io,

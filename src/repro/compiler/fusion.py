@@ -118,7 +118,9 @@ def fuse(g: Graph) -> Graph:
                 name=nd.name if op is nd.op else nd.name + "+add",
                 op=op,
                 inputs=[resolve(t) for t in nd.inputs],
-                outputs=[out_tid],
+                # Add/act fusion rewrites the primary output only; any extra
+                # outputs (multi-consumer forks) survive untouched.
+                outputs=[out_tid, *nd.outputs[1:]],
                 m=nd.m, n=nd.n, k=nd.k,
                 kernel=nd.kernel, stride=nd.stride, padding=nd.padding,
                 relu=relu,

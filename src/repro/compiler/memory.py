@@ -188,10 +188,13 @@ def assign_channels(
 
     conflicts: dict[tuple[int, str], set[tuple[int, str]]] = {s: set() for s in streams}
     for s1, s2 in itertools.combinations(streams, 2):
-        if s1[0] == s2[0]:
-            continue  # same tensor r/w: ADM in/out modules, not a [33] hazard
-        if s1[1] != s2[1]:
-            continue  # read-write pairs do not thrash a channel the same way
+        # An HBM channel is one port: concurrent transfers serialize on it
+        # regardless of direction, so *any* two streams with overlapping
+        # steady-state windows — read-read, write-write, or read-write
+        # (e.g. a stage's input fetch against its own output store, or a
+        # producer's store against the consumer's load of the same tensor)
+        # — must land on different channels or the round period stretches
+        # by the full transfer time of whichever stream loses arbitration.
         hit = any(
             _windows_overlap(a, b, t_round)
             for a in by_stream[s1]

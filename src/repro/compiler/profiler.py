@@ -7,19 +7,24 @@ the PU overlaps these, so the steady-state node time is the slowest of the
 three decoupled instruction groups, each charged its own per-instruction
 decode overhead (1 sys_clk cycle per instruction, matching the ICU decoder):
 
-    t_node = max(t_compute + cp_decode,
-                 t_load    + ld_decode,
-                 t_store   + st_decode,
-                 t_residual)
+    t_node = max(t_residual + t_compute + cp_decode,
+                 t_load     + ld_decode,
+                 t_store    + st_decode)
 
 Transfers are accounted per ADM DataMove — each transfer pays the
 latency-dominated ~40-cycle floor individually (the profiler used to lump
 all input bytes into one transfer, which under-counted tiny nodes whose
 per-stream floors dominate). The LD group only ever moves the *primary*
 input; residual shortcuts and second operands stream through the CP-issued
-async ADM engines (``t_residual``), and the second operand of an attention
-GEMM goes through the SA weight port, whose node-granular stall accounting
-lives in ``repro.compiler.weights``.
+async ADM engines (``t_residual``) — and they *serialize* with the GEMM on
+the CP path: codegen queues the RES_ADD issue together with the Compute, so
+it decodes only after the previous node's GEMM releases the CP group, and
+the Compute's residual interlock then blocks until the stream lands (the
+model used to fold ``t_residual`` into the max as if it overlapped, which
+under-predicted every stage containing a shortcut by up to one ADM floor
+per node). The second operand of an attention GEMM goes through the SA
+weight port instead, whose node-granular stall accounting lives in
+``repro.compiler.weights``.
 
 Instruction counts mirror ``repro.compiler.codegen`` (DataMove + AddrCyc +
 optional PRM + REQ/ACK handshakes per stream); dynamic weight-chunk issue
@@ -59,10 +64,9 @@ class NodeProfile:
     @property
     def t_node(self) -> float:
         return max(
-            self.t_compute + self.t_cp_decode,
+            self.t_residual + self.t_compute + self.t_cp_decode,
             self.t_load + self.t_ld_decode,
             self.t_store + self.t_st_decode,
-            self.t_residual,
         )
 
 
@@ -87,9 +91,11 @@ def instruction_counts(g: Graph, nd: Node) -> tuple[int, int, int]:
         cp += 3  # URAM_PRM + WEIGHTS_ADM + AddrCyc (weight-port stream)
     elif nd.residual_input is not None or len(nd.inputs) > 1:
         cp += 3  # RES_ADD PRM + ADM + AddrCyc
-    st = 2  # DataMove + AddrCyc
-    if nd.outputs and nd.outputs[0] not in g.output_tensors:
-        st += 2 * len(g.consumers_of(nd.outputs[0]))  # WAIT_ACK + SEND_REQ each
+    st = 0
+    for out in nd.outputs:
+        st += 2  # DataMove + AddrCyc
+        if out not in g.output_tensors:
+            st += 2 * len(g.consumers_of(out))  # WAIT_ACK + SEND_REQ each
     return ld, cp, st
 
 
@@ -99,9 +105,11 @@ def profile_node(g: Graph, nd: Node, pu: PUSpec) -> NodeProfile:
     primary = nd.inputs[0] if nd.inputs else None
     t_ld = pu.adm_seconds(g.tensors[primary].nbytes_padded) if primary is not None else 0.0
     # per-round store bytes: a K/V-cache producer appends one row per round
-    # (decode), everything else stores the whole tensor.
-    out_bytes = sum(g.tensors[t].write_bytes for t in nd.outputs)
-    t_st = pu.adm_seconds(out_bytes) if out_bytes else 0.0
+    # (decode), everything else stores the whole tensor. One ADM per output
+    # tensor, each paying its own transfer-latency floor (broadcast stores
+    # drain the out slot with back-to-back transfers, not one big one).
+    t_st = sum(pu.adm_seconds(g.tensors[t].write_bytes) for t in nd.outputs
+               if g.tensors[t].write_bytes)
 
     # CP-issued async side streams, one ADM (with its own floor) each:
     # the residual shortcut plus — for non-attention two-input nodes — the

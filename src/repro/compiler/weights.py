@@ -18,8 +18,10 @@ adjacent tiles' dynamic footprints coexist).
 Stall accounting is *node*-granular, matching the instruction generator: all
 of a node's dynamic chunks are issued with one-node lookahead and the node's
 single Compute holds the URAM interlock, so the overlap window for node j's
-chunk loads is node j-1's SA execution (cyclically across rounds for the
-first node). Attention score/context GEMMs additionally stream their second
+chunk loads is node j-1's SA execution (zero for the first node: its loads
+issue at round start, after the previous round's last GEMM has already
+drained the CP group). Attention score/context GEMMs additionally stream
+their second
 operand through the SA weight port under the same interlock; that fixed,
 non-pinnable load joins the node's chunk loads in the stall model. A
 schedule built without node context (``node_order`` empty) falls back to the
@@ -65,15 +67,20 @@ def _node_stalls(
 ) -> dict[int, float]:
     """Execution stall before each node's GEMM, per the codegen issue order:
     node j's dynamic chunks (and weight-port streams) load during node j-1's
-    SA execution (cyclically across rounds for j==0); whatever does not fit
-    stalls node j. Shared by the analytic model (`WeightSchedule.node_stalls`)
-    and the greedy allocator's inner loop so the two can never drift."""
+    SA execution; whatever does not fit stalls node j. The *first* node has
+    no overlap window at all: its loads are issued at round start, after the
+    previous round's final Compute has already released the CP group (the
+    Compute instruction holds the group until the GEMM drains, so nothing is
+    "still queued behind" across the round boundary). Shared by the analytic
+    model (`WeightSchedule.node_stalls`) and the greedy allocator's inner
+    loop so the two can never drift."""
     stalls: dict[int, float] = {}
     for j, nid in enumerate(order):
         load = node_dyn.get(nid, 0) * t_chunk_load + node_stream.get(nid, 0.0)
         if load <= 0.0:
             continue
-        s = load - node_exec.get(order[j - 1], 0.0)
+        overlap = node_exec.get(order[j - 1], 0.0) if j > 0 else 0.0
+        s = load - overlap
         if s > 0.0:
             stalls[nid] = s
     return stalls

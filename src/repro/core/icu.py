@@ -120,6 +120,7 @@ class ICU:
         rounds = 0
         weights_issued = 0  # monotone count of WEIGHTS_ADM issued by CP
         gemm_wtarget = 0  # cumulative weight chunks required by GEMMs so far
+        st_holding = False  # ST holds an out slot across a broadcast store
         insts = prog.instructions
 
         at_round_start = True
@@ -183,11 +184,17 @@ class ICU:
                     st.busy += total
                     yield Release(chan)
                 else:  # ST: drain one output buffer slot.
-                    t0 = self.kernel.now
-                    yield Acquire(self.out_full)
-                    st.buffer_wait += self.kernel.now - t0
+                    # A broadcast store (multi-output node) re-reads the
+                    # slot the node's first transfer acquired: HOLD keeps
+                    # it, only the final transfer (hold=0) frees it.
+                    if not st_holding:
+                        t0 = self.kernel.now
+                        yield Acquire(self.out_full)
+                        st.buffer_wait += self.kernel.now - t0
                     yield from self._blocking_adm(inst, st)
-                    yield Release(self.out_free)
+                    st_holding = inst.hold
+                    if not st_holding:
+                        yield Release(self.out_free)
 
             elif isinstance(inst, AddrCyc):
                 pred = insts[pc - 1]

@@ -260,6 +260,11 @@ class DataMove(Instruction):
     cur_ba: int = 0  # HBM byte address
     length: int = 0  # transfer bytes
     channel: int = 0  # HBM channel id (from liveness analysis)
+    # Broadcast stores (a node with several output tensors): HOLD keeps the
+    # output-buffer slot acquired across the node's remaining ST transfers —
+    # they re-read the same slot — and only the final transfer (HOLD=0)
+    # frees it back to the compute engine.
+    hold: bool = False
 
     def __post_init__(self) -> None:
         assert self.op in {
@@ -282,11 +287,13 @@ class DataMove(Instruction):
         p.put(_to_beats(self.cur_ba, "CUR_BA"), 26, "CUR_BA")
         p.put(_to_beats(self.length, "LEN", round_up=True), 22, "LEN")
         p.put(self.channel, 5, "CHANNEL")
+        p.put(int(self.hold), 1, "HOLD")
         return p.word
 
     @classmethod
     def _decode_payload(cls, op: Opcode, u: _Unpacker) -> "DataMove":
-        return cls(op=op, cur_ba=u.get(26) * BEAT, length=u.get(22) * BEAT, channel=u.get(5))
+        return cls(op=op, cur_ba=u.get(26) * BEAT, length=u.get(22) * BEAT,
+                   channel=u.get(5), hold=bool(u.get(1)))
 
 
 @dataclass

@@ -109,6 +109,7 @@ class _Stream:
         self.capped = False
         self.blocked: Optional[_Blocked] = None
         self.gemm_wtarget = 0
+        self.st_holding = False  # out slot held across a broadcast store
 
     @property
     def name(self) -> str:
@@ -143,11 +144,17 @@ class _Stream:
                 me.act_free -= 1
                 me.act_full += 1
             elif self.group is Group.ST:
-                if me.out_full <= 0:
-                    self.blocked = _Blocked("buf", "out_full")
-                    return False
-                me.out_full -= 1
-                me.out_free += 1
+                # Broadcast stores (DataMove.hold): the node's first
+                # transfer drains the slot, held transfers re-read it, and
+                # only the final transfer (hold=0) frees it.
+                if not self.st_holding:
+                    if me.out_full <= 0:
+                        self.blocked = _Blocked("buf", "out_full")
+                        return False
+                    me.out_full -= 1
+                self.st_holding = inst.hold
+                if not self.st_holding:
+                    me.out_free += 1
             else:  # CP: async engines; issue completes in program order
                 if effective_opcode(inst) in _WEIGHT_OPS:
                     me.weights_issued += 1

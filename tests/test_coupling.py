@@ -1,0 +1,268 @@
+"""Pipeline coupling model tests (paper Sec. IV + Sec. III-A handshakes):
+credit-loop bounds on the steady-state rate, their calibration against the
+ISU/ICU constants, simulator conformance on deep tiny-stage pipelines, and
+the satellite regressions that rode along (multi-output store handshakes,
+PBE capacity weighting from PUSpec, analysis-cache LRU order)."""
+import dataclasses
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.compiler import (
+    STATS,
+    analyze,
+    buffer_requirements,
+    clear_analysis_cache,
+    compile_model,
+    fuse,
+    partition,
+    profile_graph,
+    zoo,
+)
+from repro.compiler.compile import _ANALYSIS_CACHE_MAX
+from repro.compiler.coupling import BoundaryBound, CouplingModel, coupling_bounds
+from repro.compiler.graph import Graph, OpType
+from repro.compiler.profiler import instruction_counts
+from repro.core.icu import DECODE_CYCLES
+from repro.core.isu import token_latency_cycles
+from repro.core.pu import make_u50_system
+from repro.deploy import System, compile_deployment
+
+PUS = make_u50_system()
+KINDS = {"PU1x": PUS[0], "PU2x": PUS[5]}
+
+
+def proj_chain(dims, name="projchain"):
+    """Chain of 1x1 projections d0 -> d1 -> ... (m=1-style tiny GEMMs when
+    dims are small): the deep-pipeline regime where per-stage work drops to
+    the scale of the REQ/ACK handshake round-trip."""
+    g = Graph(name=f"{name}{len(dims) - 1}_{'x'.join(map(str, dims))}")
+    t = g.add_tensor("input", (dims[0], 1))
+    g.input_tensors = [t.tid]
+    for i, d_out in enumerate(dims[1:]):
+        out = g.add_tensor(f"h{i}", (d_out, 1))
+        g.add_node(name=f"p{i}", op=OpType.PROJ, inputs=[t.tid],
+                   outputs=[out.tid], m=d_out, n=1, k=dims[i])
+        t = out
+    g.output_tensors = [t.tid]
+    g.validate_topological()
+    return g
+
+
+def _sim_err(g, strat, rounds=12):
+    dep = compile_deployment(g, strat, rounds=rounds)
+    sim = System().load(dep).run()
+    assert not sim.deadlocked
+    meas = sim.aggregate_fps(warmup=2)
+    return dep, (dep.predicted_throughput - meas) / meas
+
+
+# ------------------------------------------------------------- unit model --
+class TestCouplingModel:
+    def _model(self, uncoupled, cycles_depths):
+        return CouplingModel(
+            uncoupled_seconds=uncoupled,
+            bounds=tuple(
+                BoundaryBound(tid=i, producer_stage=i, consumer_stage=i + 1,
+                              depth=d, cycle_seconds=c,
+                              req_latency_seconds=0.1 * c)
+                for i, (c, d) in enumerate(cycles_depths)
+            ),
+        )
+
+    def test_coupled_never_below_uncoupled_and_converges(self):
+        m = self._model(10.0, [(30.0, 2), (12.0, 4)])
+        assert m.round_seconds == pytest.approx(15.0)  # 30/2 binds
+        assert m.binding is not None and m.binding.tid == 0
+        # buffer depth -> infinity: credit loops stop binding
+        deep = self._model(10.0, [(30.0, 1000), (12.0, 1000)])
+        assert deep.round_seconds == pytest.approx(10.0)
+        assert deep.binding is None
+        # handshake latency / transfer time -> 0: same limit
+        fast = self._model(10.0, [(0.0, 2), (0.0, 4)])
+        assert fast.round_seconds == pytest.approx(10.0)
+
+    if HAVE_HYPOTHESIS:
+
+        @settings(max_examples=200, deadline=None)
+        @given(
+            uncoupled=st.floats(0.0, 1e3),
+            loops=st.lists(
+                st.tuples(st.floats(0.0, 1e4), st.integers(1, 64)),
+                max_size=6,
+            ),
+            scale=st.integers(1, 1024),
+        )
+        def test_property_bounds(self, uncoupled, loops, scale):
+            """coupled >= uncoupled always; monotone in buffer depth; and
+            scaling every depth by k pulls the coupled time toward the
+            uncoupled floor (convergence as depth -> infinity)."""
+            m = self._model(uncoupled, loops)
+            assert m.round_seconds >= m.uncoupled_seconds
+            deeper = self._model(uncoupled, [(c, d * scale) for c, d in loops])
+            assert deeper.round_seconds <= m.round_seconds + 1e-12
+            assert deeper.round_seconds >= uncoupled
+
+    def test_bounds_calibrated_from_isu_constants(self):
+        """The same partition placed on same-SLR vs cross-SLR PU pairs must
+        differ by exactly the ISU token-latency delta — the model reads the
+        hardware constants, it is not hand-tuned."""
+        g = fuse(proj_chain([8, 8, 8]))
+        prof = profile_graph(g, KINDS)
+        part = partition(g, prof, 2, 0)
+        assert part.n_used == 2
+        plans = buffer_requirements(g, part, n_io=4)
+        specs = {p.pid: p for p in PUS}
+        same = coupling_bounds(g, part, plans, {0: 0, 1: 1}, specs)
+        cross = coupling_bounds(g, part, plans, {0: 0, 1: 5}, specs)
+        (b_same,) = [b for b in same if b.producer_stage == 0]
+        (b_cross,) = [b for b in cross if b.producer_stage == 0]
+        lat = lambda a, b: token_latency_cycles(specs[a], specs[b])  # noqa: E731
+        want = (lat(0, 5) + lat(5, 0) - lat(0, 1) - lat(1, 0)) / PUS[0].sys_clk_hz
+        assert b_cross.cycle_seconds - b_same.cycle_seconds == pytest.approx(want)
+        # four handshake instruction decodes ride on every loop
+        assert b_same.cycle_seconds >= 4 * DECODE_CYCLES / PUS[0].sys_clk_hz
+
+    def test_depth_follows_memory_plan_regions(self):
+        """Credit depths come from the stage-distance buffer analysis: an
+        adjacent-stage tensor couples at depth 2 (ping-pong)."""
+        cm = compile_model(proj_chain([8] * 11), 5, 5)
+        assert cm.coupling is not None
+        for b in cm.coupling.bounds:
+            assert b.depth == cm.mem.tensors[b.tid].n_regions
+
+    def test_compiled_model_threads_coupling(self):
+        cm = compile_model(proj_chain([8] * 11), 5, 5)
+        assert cm.predicted_round_time == cm.coupling.round_seconds
+        assert cm.predicted_round_time >= max(cm.stage_times.values())
+        # the deep tiny-stage pipeline is credit-limited, not stage-limited
+        assert cm.coupling.binding is not None
+        assert cm.predicted_latency >= sum(cm.stage_times.values())
+
+
+# ------------------------------------------------------- sim conformance --
+class TestCouplingConformance:
+    def test_deep_tiny_pipeline_within_2pct(self):
+        """Ten single-node tiny stages: the credit loop binds (the uncoupled
+        model runs >5% hot) and the coupled prediction lands within 2% of
+        the discrete-event simulator."""
+        dep, err = _sim_err(proj_chain([8] * 11), (5, 5))
+        cpl = dep.members[0].compiled.coupling
+        uncoupled_err = (1.0 / cpl.uncoupled_seconds) / (
+            dep.predicted_throughput / (1 + err)) - 1.0
+        assert cpl.binding is not None
+        assert abs(err) <= 0.02
+        assert uncoupled_err > 0.05
+
+    def test_two_stage_unbalanced_within_2pct(self):
+        """Fast producer feeding a ~4x slower consumer: the fast stage runs
+        at the rate its neighbor returns credits, and the model tracks the
+        simulator within 2%."""
+        _, err = _sim_err(proj_chain([8, 8, 256]), (1, 1))
+        assert abs(err) <= 0.02
+
+    def test_two_stage_balanced_tiny_within_2pct(self):
+        _, err = _sim_err(proj_chain([8, 8, 8]), (1, 1))
+        assert abs(err) <= 0.02
+
+
+# ------------------------------------------------- satellite regressions --
+class TestMultiOutputHandshakes:
+    """compiler/profiler.py used to count ST WAIT_ACK/SEND_REQ handshakes
+    only for outputs[0] while charging store bytes for every output (and
+    codegen silently dropped the extra stores entirely)."""
+
+    def _fork_graph(self):
+        g = Graph(name="fork2")
+        x = g.add_tensor("input", (8, 1))
+        g.input_tensors = [x.tid]
+        t1 = g.add_tensor("t1", (8, 1))
+        t2 = g.add_tensor("t2", (8, 1))
+        g.add_node(name="src", op=OpType.PROJ, inputs=[x.tid],
+                   outputs=[t1.tid, t2.tid], m=8, n=1, k=8)
+        o1 = g.add_tensor("o1", (8, 1))
+        o2 = g.add_tensor("o2", (8, 1))
+        g.add_node(name="a", op=OpType.PROJ, inputs=[t1.tid],
+                   outputs=[o1.tid], m=8, n=1, k=8)
+        g.add_node(name="b", op=OpType.PROJ, inputs=[t2.tid],
+                   outputs=[o2.tid], m=8, n=1, k=8)
+        g.output_tensors = [o1.tid, o2.tid]
+        g.validate_topological()
+        return g
+
+    def test_counts_every_output(self):
+        g = self._fork_graph()
+        src = g.nodes[0]
+        _, _, st_count = instruction_counts(g, src)
+        # two stores (DataMove + AddrCyc each) + one consumer handshake pair
+        # (WAIT_ACK + SEND_REQ) per forwarded output
+        assert st_count == 2 * 2 + 2 * 1 + 2 * 1
+
+    def test_codegen_emits_matching_store_stream(self):
+        g = self._fork_graph()
+        cm = compile_model(g, 2, 0)
+        stage_of = cm.part.stage_of_node()
+        src = g.nodes[0]
+        stage = stage_of[src.nid]
+        prog = cm.programs[stage]
+        expect = sum(instruction_counts(g, nd)[2]
+                     for nd in g.nodes if stage_of[nd.nid] == stage)
+        # ST body = the stage's concatenated store streams (+ ProgCtrl)
+        assert len(prog.st.instructions) == expect + 1
+
+    def test_fork_simulates_clean(self):
+        dep, err = _sim_err(self._fork_graph(), (2, 0), rounds=8)
+        assert abs(err) <= 0.05
+
+
+class TestPbeCapacityWeights:
+    def test_caps_follow_peak_tops(self):
+        """pbe() derives stage capacity weights from PUSpec.peak_tops — a
+        non-default PU array (4x-wide second kind) must not silently fall
+        back to the 1:2 weighting of the U50 default."""
+        pus = [dataclasses.replace(p, sa_cols=16) if p.kind == "PU2x" else p
+               for p in make_u50_system()]
+        g = zoo.tiny_cnn(channels=(8, 8, 8), hw=8)
+        cm = compile_model(g, 1, 1, pus=pus)
+        caps = {k: s.peak_tops for k, s in cm.analysis.pu_kinds.items()}
+        assert caps["PU2x"] == pytest.approx(4 * caps["PU1x"])
+        used = [s for s in cm.part.stages if s.nids]
+        want = sum(cm.stage_times[s.index] * caps[s.pu_kind] for s in used) / (
+            cm.predicted_round_time * sum(caps[s.pu_kind] for s in used))
+        assert cm.pbe() == pytest.approx(want)
+        # the default machine reproduces the historical 1:2 weighting
+        cm_def = compile_model(g, 1, 1)
+        caps_def = {"PU1x": 1.0, "PU2x": 2.0}
+        want_def = sum(cm_def.stage_times[s.index] * caps_def[s.pu_kind]
+                       for s in cm_def.part.stages if s.nids) / (
+            cm_def.predicted_round_time
+            * sum(caps_def[s.pu_kind] for s in cm_def.part.stages if s.nids))
+        assert cm_def.pbe() == pytest.approx(want_def)
+
+
+class TestAnalysisCacheLRU:
+    def test_hit_refreshes_eviction_order(self):
+        """A recently-hit analysis must survive eviction churn; before the
+        fix the insertion-order pop evicted it as readily as a cold one."""
+        clear_analysis_cache()
+        # structurally distinct graphs (distinct fingerprints), one per slot
+        graphs = [proj_chain([8, 8 + i], name=f"lru{i}")
+                  for i in range(_ANALYSIS_CACHE_MAX + 1)]
+        for g in graphs[:-1]:
+            analyze(g)  # fill the cache exactly to capacity
+        h0, m0 = STATS.analysis_hits, STATS.analysis_misses
+        analyze(graphs[0])  # touch the oldest entry...
+        assert (STATS.analysis_hits, STATS.analysis_misses) == (h0 + 1, m0)
+        analyze(graphs[-1])  # ...then force one eviction
+        assert STATS.analysis_misses == m0 + 1
+        analyze(graphs[0])  # the touched entry survived (LRU popped graphs[1])
+        assert STATS.analysis_hits == h0 + 2
+        analyze(graphs[1])  # the untouched second-oldest one was evicted
+        assert STATS.analysis_misses == m0 + 2
+        clear_analysis_cache()

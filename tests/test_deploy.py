@@ -386,10 +386,36 @@ class TestConformance:
             dep_c.predicted_throughput, rel=tol_c)
 
 
+class TestDeepPipelineConformance:
+    """Deep (all-ten-PU) pipelines of tiny stages used to run 15-20% hot in
+    the analytic model: per-stage compute no longer hides the cross-PU
+    REQ/ACK round-trip and the HBM channel port contention, so
+    max(stage_times) undershot the simulated period. With the coupling model
+    these configurations hold the standard conformance tolerance."""
+
+    def test_ten_stage_tiny_chain_within_3pct(self):
+        g = zoo.linear_chain(10, ch=8, hw=8)
+        dep = compile_deployment(g, (5, 5), rounds=10)
+        sim = System().load(dep).run()
+        assert not sim.deadlocked
+        assert sim.aggregate_fps(warmup=2) == pytest.approx(
+            dep.predicted_throughput, rel=0.03)
+
+    def test_prediction_is_coupling_aware(self):
+        """The deployed prediction must come from the coupled steady-state
+        rate, never the bare stage-time maximum, whenever a boundary bound
+        binds."""
+        g = zoo.linear_chain(10, ch=8, hw=8)
+        dep = compile_deployment(g, (5, 5), rounds=10)
+        cpl = dep.members[0].compiled.coupling
+        assert cpl is not None
+        assert cpl.round_seconds >= cpl.uncoupled_seconds
+
+
 class TestDecodeServing:
     """Decode-phase workloads through the unchanged DSE/deploy stack
     (acceptance): explore produces DP-A/B/C deployments that simulate within
-    10% of the analytic model, and a running System hot-swaps a prefill
+    5% of the analytic model, and a running System hot-swaps a prefill
     deployment to a decode deployment with no reconfiguration. One decode
     round = one token; deployments default to one full decode window."""
 
@@ -422,18 +448,19 @@ class TestDecodeServing:
         assert all(p.ld.progctrl.nr == DEFAULT_ROUNDS for p in dep.programs())
 
     @pytest.mark.parametrize("dp_name", ["dp_a", "dp_b"])
-    def test_design_points_within_10pct(self, dec_dse, dp_name):
+    def test_design_points_within_5pct(self, dec_dse, dp_name):
         dep = dec_dse.deploy(getattr(dec_dse, dp_name))
         sim = System().load(dep).run()
         assert not sim.deadlocked
         assert all(m.rounds == self.STEPS for m in sim.members)
         assert sim.aggregate_fps(warmup=2) == pytest.approx(
-            dep.predicted_throughput, rel=0.10)
+            dep.predicted_throughput, rel=0.05)
 
-    def test_dp_c_within_10pct(self):
-        """DP-C (one PU per member) on the reduced config — single-PU members
-        sidestep the known deep-pipeline coupling gap and the tiny weights
-        keep the 10-member simulation fast."""
+    def test_dp_c_within_5pct(self):
+        """DP-C (one PU per member) on the reduced config — the tiny weights
+        keep the 10-member simulation fast. With the pipeline coupling model
+        (residual serialization, per-channel HBM contention, credit-loop
+        bound) the decode predictions hold at 5%."""
         from repro.configs import get_config
 
         g = zoo.transformer_decoder(get_config("qwen3-0.6b").reduced(),
@@ -445,7 +472,7 @@ class TestDecodeServing:
         assert not sim.deadlocked
         assert len(sim.members) == 10
         assert sim.aggregate_fps(warmup=2) == pytest.approx(
-            dep.predicted_throughput, rel=0.10)
+            dep.predicted_throughput, rel=0.05)
 
     def test_prefill_to_decode_hot_swap(self, dec_dse):
         """Acceptance: prefill tenant -> decode tenant on one fixed machine,
