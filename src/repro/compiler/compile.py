@@ -62,6 +62,8 @@ class CompileStats:
     codegen_calls: int = 0
     analysis_hits: int = 0
     analysis_misses: int = 0
+    tables_builds: int = 0  # dense AnalysisTables exports (once per analysis)
+    batched_score_calls: int = 0  # vectorized scoring passes (repro.dse.batched)
 
     def reset(self) -> None:
         for f in dataclasses.fields(self):
@@ -97,6 +99,8 @@ class GraphAnalysis:
     # budget-independent, so config (a, b) reuses everything (a', b') solved
     _partition_memo: dict[tuple[int, int, int], float] = field(
         default_factory=dict)
+    # lazy dense-array export for the vectorized DSE engine
+    _tables: Optional[object] = field(default=None, repr=False, compare=False)
 
     def weight_schedule(self, nids: tuple[int, ...], pu_kind: str) -> WeightSchedule:
         """SMOF schedule for a contiguous node segment on one PU kind,
@@ -138,6 +142,20 @@ class GraphAnalysis:
             extra = ws.total_stall() + 2 * n_dyn * DECODE_CYCLES / spec.sys_clk_hz
             self._stage_overheads[key] = extra
         return extra
+
+    def tables(self) -> "object":
+        """Dense-array export of this analysis for the vectorized DSE
+        engine (``repro.compiler.tables.AnalysisTables``): per-kind node
+        profiles, weight-tile layout, coupling edge geometry and (grown on
+        demand) the dense partition-DP value table. Built lazily once per
+        analysis and shared by every batched scoring call."""
+        if self._tables is None:
+            from .tables import AnalysisTables
+
+            STATS.tables_builds += 1
+            self._tables = AnalysisTables(self.graph, self.profiles,
+                                          self.pu_kinds)
+        return self._tables
 
 
 # graph-fingerprint -> GraphAnalysis memo (bounded; LRU eviction — lookups

@@ -103,14 +103,17 @@ class CouplingModel:
     @property
     def forward_latency_seconds(self) -> float:
         """Per-item latency added by handshake forwarding: each distinct
-        producer->consumer stage hop pays its one-way REQ flight once."""
+        producer->consumer stage hop pays its one-way REQ flight once.
+        Hops are summed in canonical (producer, consumer) order so every
+        engine — scalar, reference, and the vectorized scorer of
+        ``repro.dse.batched`` — accumulates the identical float sequence."""
         hops: dict[tuple[int, int], float] = {}
         for b in self.bounds:
             key = (b.producer_stage, b.consumer_stage)
             cur = hops.get(key)
             if cur is None or b.req_latency_seconds < cur:
                 hops[key] = b.req_latency_seconds
-        return sum(hops.values())
+        return sum(hops[k] for k in sorted(hops))
 
 
 def _credit_depth(plan: TensorPlan) -> int:

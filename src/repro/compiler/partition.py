@@ -122,7 +122,25 @@ def partition(
         cache[key] = best
         return best
 
-    # Reconstruct.
+    stages = reconstruct_stages(order, seg_cost, f, n_pu1x, n_pu2x)
+    return Partition(stages=stages, node_order=order)
+
+
+def reconstruct_stages(
+    order: list[int],
+    seg_cost,
+    f,
+    n_pu1x: int,
+    n_pu2x: int,
+) -> list[Stage]:
+    """Greedy reconstruction of an optimal stage list from the DP value
+    function ``f(i, u1, u2)`` and segment costs ``seg_cost(kind, i, j)``.
+
+    Shared by :func:`partition` (memoized recursive ``f``) and the
+    dense-table path of ``repro.compiler.tables`` (``f`` reads a
+    pre-filled array), so the two engines reconstruct byte-identical
+    stage boundaries by construction."""
+    n = len(order)
     stages: list[Stage] = []
     i, u1, u2 = 0, n_pu1x, n_pu2x
     target = f(0, u1, u2)
@@ -160,5 +178,4 @@ def partition(
             raise RuntimeError("DP reconstruction failed")
     # Drop trailing empty stages; they carry no program.
     stages = [s for s in stages if s.nids]
-    stages = [Stage(i, s.pu_kind, s.nids, s.time) for i, s in enumerate(stages)]
-    return Partition(stages=stages, node_order=order)
+    return [Stage(i, s.pu_kind, s.nids, s.time) for i, s in enumerate(stages)]

@@ -180,24 +180,39 @@ def segment_shape_key(g: Graph, nids: "list[int] | tuple[int, ...]") -> tuple:
     return tuple(parts)
 
 
+def node_tile_shapes(m: int, k: int, sa_rows: int) -> list[tuple[int, int, int]]:
+    """The 64-out-channel weight tiling of one node: ``(m_here,
+    weight_bytes, n_chunks)`` per tile (int8 weights + int32 bias per
+    slice). Single source of the tiling math, shared by :func:`build_tiles`
+    and the dense-array export (``repro.compiler.tables``) so the
+    vectorized DSE engine can never drift from the schedule builder.
+    Returns ``[]`` for weight-less nodes."""
+    if m * k + 4 * m == 0:
+        return []
+    n_tiles = max(1, math.ceil(m / sa_rows))
+    out = []
+    for ti in range(n_tiles):
+        m_here = min(sa_rows, m - ti * sa_rows)
+        wb = m_here * k + 4 * m_here
+        out.append((m_here, wb, max(1, math.ceil(wb / CHUNK_BYTES))))
+    return out
+
+
 def build_tiles(g: Graph, nids: list[int], pu: PUSpec) -> list[Tile]:
     tiles: list[Tile] = []
     for nid in nids:
         nd = g.node_by_id(nid)
         if nd.weight_bytes == 0:
             continue
-        n_tiles = max(1, math.ceil(nd.m / pu.sa_rows))
-        per_tile_m = pu.sa_rows
-        for ti in range(n_tiles):
-            m_here = min(per_tile_m, nd.m - ti * per_tile_m)
-            wb = m_here * nd.k + 4 * m_here  # int8 weights + int32 bias
+        for ti, (m_here, wb, n_chunks) in enumerate(
+                node_tile_shapes(nd.m, nd.k, pu.sa_rows)):
             tiles.append(
                 Tile(
                     nid=nid,
                     tile_idx=ti,
                     weight_bytes=wb,
                     t_exec=pu.gemm_seconds(m_here, nd.n, nd.k),
-                    n_chunks=max(1, math.ceil(wb / CHUNK_BYTES)),
+                    n_chunks=n_chunks,
                 )
             )
     return tiles

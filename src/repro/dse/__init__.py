@@ -1,6 +1,7 @@
 # DSE methodology (paper Sec. V-A): single-batch enumeration, multi-batch
 # hybrid-parallel composition, Pareto analysis — plus multi-tenant
 # co-exploration (joint placements of several models on one machine).
+from .batched import BatchedScores, score_details, score_single_batch
 from .explorer import (
     DSEResult,
     MultiBatchSchedule,
@@ -18,7 +19,10 @@ from .explorer import (
 from .pareto import constrained, pareto_front, pareto_front_bruteforce
 
 __all__ = [
+    "BatchedScores",
     "DSEResult",
+    "score_details",
+    "score_single_batch",
     "MultiBatchSchedule",
     "MultiDSEResult",
     "MultiTenantPoint",

@@ -31,10 +31,21 @@ recursion is bounded by remaining-budget best-case throughput: a partial
 placement whose optimistic completion is already strictly dominated by a
 found point is abandoned.
 
-``explore``/``explore_multi`` accept ``engine="reference"`` to run the
-pre-caching brute-force engine (full recompile incl. eager codegen per
-config, unpruned composition, O(n²) Pareto) — the oracle the equivalence
-tests and ``benchmarks/dse_bench.py`` measure the fast engine against.
+``explore``/``explore_multi`` accept three engines. ``engine="batched"``
+(the default; ``"fast"`` is kept as an alias) scores every Step-1 config in
+one vectorized pass over the dense ``AnalysisTables`` export
+(``repro.dse.batched``); ``engine="scalar"`` runs the same analytic model
+one ``place()`` call per config; ``engine="reference"`` is the pre-caching
+brute-force engine (full recompile incl. eager codegen per config, unpruned
+composition, O(n²) Pareto) — the oracle the equivalence tests and
+``benchmarks/dse_bench.py`` measure the other two against. All three
+produce byte-identical frontiers and design points at tolerance 0.
+
+``explore_multi(prev=...)`` re-explores incrementally: Step-1 caches of
+tenants already present in a prior result are reused (matched by graph
+fingerprint under the same PU array and budget) and the prior frontier
+seeds the joint recursion's incumbent set, so a one-tenant change re-scores
+only the changed tenant — exactly frontier-preserving.
 """
 from __future__ import annotations
 
@@ -42,10 +53,12 @@ import math
 from dataclasses import dataclass, field
 from typing import Optional
 
+import numpy as np
+
 from ..compiler.compile import analyze, place
 from ..compiler.graph import Graph
 from ..core.pu import PUSpec, make_u50_system
-from .pareto import _threshold, pareto_front, pareto_front_bruteforce
+from .pareto import pareto_front, pareto_front_bruteforce
 
 PU1X_TOPS = 0.3072
 PU2X_TOPS = 0.6144
@@ -106,27 +119,46 @@ def _point_of(cm, a: int, b: int) -> SingleBatchPoint:
                             pbe=cm.pbe())
 
 
+def _normalize_engine(engine: str) -> str:
+    """Canonical engine name: "batched" (vectorized scorer, the default),
+    "scalar" (per-config ``place()``), "reference" (pre-caching brute
+    force). "fast" is the historical alias of the default engine."""
+    if engine == "fast":
+        return "batched"
+    if engine not in ("batched", "scalar", "reference"):
+        raise ValueError(f"unknown engine {engine!r}")
+    return engine
+
+
 def enumerate_single_batch(
     g: Graph,
     *,
     n_pu1x: int = 5,
     n_pu2x: int = 5,
     pus: Optional[list[PUSpec]] = None,
+    engine: str = "batched",
 ) -> list[SingleBatchPoint]:
     """Step 1: evaluate every (a, b) against one shared graph analysis.
 
     Fusion/profiling/weight-scheduling results come from the memoized
-    ``analyze`` artifact; each config only pays the DP partition and stage
-    arithmetic of ``place``. No instructions are generated."""
+    ``analyze`` artifact; no instructions are generated. With the default
+    ``engine="batched"`` the whole sweep is one vectorized scoring pass
+    over the dense analysis tables (``repro.dse.batched``);
+    ``engine="scalar"`` pays one ``place()`` call per config. The two
+    return byte-identical points."""
+    if engine not in ("batched", "scalar"):
+        raise ValueError(f"unknown Step-1 engine {engine!r}")
     pus = pus if pus is not None else make_u50_system()
     ana = analyze(g, pus)
-    points: list[SingleBatchPoint] = []
-    for a in range(n_pu1x + 1):
-        for b in range(n_pu2x + 1):
-            if a + b == 0:
-                continue
-            points.append(_point_of(place(ana, a, b, pus=pus), a, b))
-    return points
+    configs = [(a, b)
+               for a in range(n_pu1x + 1)
+               for b in range(n_pu2x + 1)
+               if a + b > 0]
+    if engine == "batched":
+        from .batched import score_single_batch
+
+        return score_single_batch(ana, configs, pus=pus)
+    return [_point_of(place(ana, a, b, pus=pus), a, b) for a, b in configs]
 
 
 def enumerate_single_batch_reference(
@@ -435,6 +467,14 @@ class MultiDSEResult:
     points: list[MultiTenantPoint]
     frontier: list[MultiTenantPoint]
     pus: Optional[list[PUSpec]] = None
+    # the budget this co-exploration ran with — ``explore_multi(prev=...)``
+    # reuses a prior result only when machine and budget are unchanged
+    n_pu1x: int = 5
+    n_pu2x: int = 5
+    # per-tenant graph fingerprints at result time — ``prev=`` reuse keys
+    # Step-1 caches on these (the content the caches were computed from)
+    # instead of re-hashing possibly-mutated prev graph objects.
+    fingerprints: tuple = ()  # tuple[str, ...]
     validation: list[MultiTenantValidationRecord] = field(default_factory=list)
 
     @property
@@ -509,7 +549,8 @@ def _best_case_fps(
 def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
                   tolerance: float = 0.0, pus: Optional[list[PUSpec]] = None,
                   validate: int = 0, validate_rounds: int = 5,
-                  engine: str = "fast") -> MultiDSEResult:
+                  engine: str = "batched",
+                  prev: Optional[MultiDSEResult] = None) -> MultiDSEResult:
     """Co-explore joint placements of several tenant models on one machine.
 
     ``graphs`` is a list of Graphs (or deploy ``Workload``s), one per tenant.
@@ -525,7 +566,18 @@ def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
     additionally pre-prunes per-tenant configs that are strictly
     fps-dominated at equal-or-lower cost (sound only under exact dominance:
     the other tenants' unchanged rates mask any margin version).
-    ``engine="reference"`` disables both and runs the brute-force engine.
+    ``engine="reference"`` disables both and runs the brute-force engine;
+    ``engine="scalar"`` keeps them but scores Step 1 per-config instead of
+    through the batched engine.
+
+    ``prev`` makes the co-exploration incremental: any tenant whose graph
+    fingerprint appears in ``prev`` (same PU array, same budget) reuses its
+    prior Step-1 cache verbatim, and the prior frontier is projected onto
+    the new tenant list to seed the joint recursion's incumbent set — so
+    adding, dropping or swapping one tenant re-scores only that tenant's
+    candidate slice. Every seed is an achievable placement of *this* run's
+    search space, so the bound stays exactly frontier-preserving and the
+    result equals the from-scratch exploration.
 
     ``validate=N`` deploys + simulates up to N joint placements (the
     max-min-fair ``balanced`` point first, then the frontier by normalized
@@ -537,13 +589,12 @@ def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
     their full advancing-length cycle."""
     from ..deploy import Workload
 
-    if engine not in ("fast", "reference"):
-        raise ValueError(f"unknown engine {engine!r}")
+    engine = _normalize_engine(engine)
     workloads = tuple(Workload.of(g) for g in graphs)
     if len(workloads) < 2:
         raise ValueError("explore_multi needs at least two tenant graphs")
     pus = pus if pus is not None else make_u50_system()
-    fast = engine == "fast"
+    fast = engine != "reference"
     # The per-tenant config pre-prune is sound only under exact dominance:
     # swapping one tenant's config leaves every *other* tenant's rate
     # unchanged, and a tolerant dominator must clear the threshold on every
@@ -555,15 +606,34 @@ def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
     cfg_prune = fast and tolerance == 0.0
     bound = fast and tolerance >= 0.0
 
+    # Incremental re-exploration: a prior result's Step-1 caches carry over
+    # for any tenant still present (matched by graph fingerprint), provided
+    # machine and budget are unchanged — the points are a pure function of
+    # (graph, pus, budget).
+    fps_order = [w.graph.fingerprint() for w in workloads]
+    prev_fps: list[str] = []
+    step1_by_fp: dict[str, list[SingleBatchPoint]] = {}
+    if prev is not None and fast and prev.pus == pus \
+            and prev.n_pu1x == n_pu1x and prev.n_pu2x == n_pu2x:
+        prev_fps = (list(prev.fingerprints) if prev.fingerprints
+                    else [w.graph.fingerprint() for w in prev.workloads])
+        for fp, pts in zip(prev_fps, prev.singles):
+            step1_by_fp.setdefault(fp, pts)
+    else:
+        prev = None
+
     singles: list[list[SingleBatchPoint]] = []
     caches: list[dict[tuple[int, int], SingleBatchPoint]] = []
-    step1_by_fp: dict[str, list[SingleBatchPoint]] = {}
-    for w in workloads:
-        fp = w.graph.fingerprint()
+    for w, fp in zip(workloads, fps_order):
         pts = step1_by_fp.get(fp) if fast else None
         if pts is None:
-            enum = enumerate_single_batch if fast else enumerate_single_batch_reference
-            pts = enum(w.graph, n_pu1x=n_pu1x, n_pu2x=n_pu2x, pus=pus)
+            if fast:
+                pts = enumerate_single_batch(w.graph, n_pu1x=n_pu1x,
+                                             n_pu2x=n_pu2x, pus=pus,
+                                             engine=engine)
+            else:
+                pts = enumerate_single_batch_reference(
+                    w.graph, n_pu1x=n_pu1x, n_pu2x=n_pu2x, pus=pus)
             step1_by_fp[fp] = pts
         singles.append(pts)
         caches.append({p.config: p for p in pts})
@@ -579,7 +649,12 @@ def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
         cfg_lists = [sorted(c) for c in caches]
     best_case = [_best_case_fps(s, n_pu1x, n_pu2x) for s in singles]
     n_tenants = len(workloads)
-    incumbents: list[tuple[float, ...]] = []  # non-dominated fps vectors
+    # Non-dominated incumbent fps vectors live in ``inc_arr[:inc_n]``: a
+    # grow-on-demand row array so the dominance tests below run as one
+    # vectorized comparison per call instead of Python loops — on deep
+    # joint recursions the incumbent checks are the hot path.
+    inc_arr = np.empty((64, max(n_tenants, 1)))
+    inc_n = 0
 
     def bounded_out(i: int, rem_a: int, rem_b: int, got: list[float]) -> bool:
         """True when this partial placement cannot contribute a frontier
@@ -593,43 +668,109 @@ def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
             if b == -math.inf:
                 return True
             opt.append(b)
-        if not bound:
+        if not bound or not inc_n:
             return False
-        for inc in incumbents:
-            if (all(x >= _threshold(o, tolerance) for x, o in zip(inc, opt))
-                    and any(x > o for x, o in zip(inc, opt))):
-                return True
-        return False
+        A = inc_arr[:inc_n]
+        o = np.array(opt)
+        if tolerance == 0.0:
+            # finite rates: sign(A - o) encodes both comparisons, so the
+            # dominance test is one subtract plus two reductions.
+            D = A - o
+            return bool(((D.min(axis=1) >= 0.0)
+                         & (D.max(axis=1) > 0.0)).any())
+        thr = np.where(o >= 0.0, o * (1.0 + tolerance), o * (1.0 - tolerance))
+        return bool(((A >= thr).all(axis=1) & (A > o).any(axis=1)).any())
 
     def note_incumbent(fps: tuple[float, ...]) -> None:
-        incumbents[:] = [
-            inc for inc in incumbents
-            if not (all(f >= x for f, x in zip(fps, inc))
-                    and any(f > x for f, x in zip(fps, inc)))
-        ]
-        if not any(
-            all(x >= f for x, f in zip(inc, fps))
-            for inc in incumbents
-        ):
-            incumbents.append(fps)
+        nonlocal inc_arr, inc_n
+        f = np.array(fps)
+        if inc_n:
+            # sign(f - A) per row: mn >= 0 & mx > 0 means f dominates the
+            # incumbent; mx <= 0 means the incumbent weakly dominates f
+            # (disjoint conditions, so one pass serves both tests).
+            D = f - inc_arr[:inc_n]
+            mx = D.max(axis=1)
+            dominated = (D.min(axis=1) >= 0.0) & (mx > 0.0)
+            if (mx <= 0.0).any():
+                return  # weakly dominated by a surviving incumbent
+            if dominated.any():
+                kept = inc_arr[:inc_n][~dominated]  # fancy index copies
+                inc_n = len(kept)
+                inc_arr[:inc_n] = kept
+        if inc_n == len(inc_arr):
+            inc_arr = np.concatenate([inc_arr, np.empty_like(inc_arr)])
+        inc_arr[inc_n] = f
+        inc_n += 1
+
+    if prev is not None and bound and prev.frontier:
+        # Project each prior frontier point onto the new tenant list:
+        # tenants matched by fingerprint keep their prior config, new
+        # tenants greedily take their best-rate config that still fits.
+        # Every successful projection is an achievable placement of *this*
+        # run's search space, so seeding its rate vector prunes only
+        # partial placements a real point dominates beyond tolerance — the
+        # incumbent bound stays exactly frontier-preserving while the
+        # recursion starts warm instead of rediscovering the old frontier.
+        for pt in prev.frontier:
+            pool: dict[str, list[tuple[int, int]]] = {}
+            for fp, cfg in zip(prev_fps, pt.configs):
+                pool.setdefault(fp, []).append(cfg)
+            chosen: list[Optional[tuple[int, int]]] = []
+            for fp in fps_order:
+                cfgs = pool.get(fp)
+                chosen.append(cfgs.pop(0) if cfgs else None)
+            rem_a = n_pu1x - sum(c[0] for c in chosen if c is not None)
+            rem_b = n_pu2x - sum(c[1] for c in chosen if c is not None)
+            ok = rem_a >= 0 and rem_b >= 0
+            if ok:
+                for i, cfg in enumerate(chosen):
+                    if cfg is not None:
+                        continue
+                    best_cfg, best_fps = None, -math.inf
+                    for (a, b), p in caches[i].items():
+                        if a <= rem_a and b <= rem_b and p.fps > best_fps:
+                            best_cfg, best_fps = (a, b), p.fps
+                    if best_cfg is None:
+                        ok = False
+                        break
+                    chosen[i] = best_cfg
+                    rem_a -= best_cfg[0]
+                    rem_b -= best_cfg[1]
+            if ok:
+                note_incumbent(tuple(
+                    caches[i][cfg].fps for i, cfg in enumerate(chosen)))
 
     def rec(i: int, rem_a: int, rem_b: int, chosen: list[tuple[int, int]],
             got: list[float]) -> None:
-        if i == n_tenants:
-            members = [caches[j][c] for j, c in enumerate(chosen)]
-            fps = tuple(m.fps for m in members)
-            points.append(
-                MultiTenantPoint(
-                    configs=tuple(chosen),
-                    fps=fps,
-                    latency=tuple(m.latency for m in members),
-                    tops=sum(m.tops for m in members),
-                )
-            )
-            if bound:
-                note_incumbent(fps)
-            return
         if bounded_out(i, rem_a, rem_b, got):
+            return
+        if i == n_tenants - 1:
+            # Last tenant: every fitting config completes the same prefix,
+            # so the completions differ only in the final rate — all but
+            # the best are weakly dominated by it and one note_incumbent
+            # call covers the whole group (no pruning check can run
+            # between siblings, so the incumbent set evolves identically).
+            pre = [caches[j][c] for j, c in enumerate(chosen)]
+            pre_fps = tuple(got)
+            pre_lat = tuple(m.latency for m in pre)
+            pre_tops = sum(m.tops for m in pre)
+            prefix = tuple(chosen)
+            best = -math.inf
+            for a, b in cfg_lists[i]:
+                if a <= rem_a and b <= rem_b:
+                    m = caches[i][(a, b)]
+                    points.append(
+                        MultiTenantPoint(
+                            configs=prefix + ((a, b),),
+                            fps=pre_fps + (m.fps,),
+                            latency=pre_lat + (m.latency,),
+                            tops=pre_tops + m.tops,
+                        )
+                    )
+                    if m.fps > best:
+                        best = m.fps
+            if bound and best > -math.inf:
+                note_incumbent(pre_fps + (best,))
             return
         for a, b in cfg_lists[i]:
             if a <= rem_a and b <= rem_b:
@@ -653,7 +794,9 @@ def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
     frontier = front(points, objectives, tolerance=tolerance)
 
     res = MultiDSEResult(workloads=workloads, singles=singles, points=points,
-                         frontier=frontier, pus=pus)
+                         frontier=frontier, pus=pus,
+                         n_pu1x=n_pu1x, n_pu2x=n_pu2x,
+                         fingerprints=tuple(fps_order))
     if validate > 0:
         # tenants with their own round semantics (explicit Workload.rounds
         # or a decode window) validate on per-member defaults, so decode
@@ -689,7 +832,7 @@ def explore_multi(graphs, *, n_pu1x: int = 5, n_pu2x: int = 5,
 def explore(g, *, n_pu1x: int = 5, n_pu2x: int = 5,
             tolerance: float = 0.0, pus: Optional[list[PUSpec]] = None,
             validate: int = 0, validate_rounds: int = 5,
-            engine: str = "fast") -> DSEResult:
+            engine: str = "batched") -> DSEResult:
     """Run the three DSE steps; optionally cross-check the analytic cache.
 
     ``g`` is a Graph or a deploy ``Workload`` — any frontend graph flows
@@ -698,17 +841,20 @@ def explore(g, *, n_pu1x: int = 5, n_pu2x: int = 5,
     compiler/ISA concern: a decode tenant enumerates, composes and deploys
     exactly like a prefill or CNN tenant.
 
-    The default ``engine="fast"`` shares one memoized graph analysis across
-    all Step-1 configs, generates **zero** instructions (codegen runs only
-    when a point is deployed), prunes cost-dominated member configs from the
-    Step-2 composition (margin-aware at ``tolerance > 0``, see
-    ``enumerate_multi_batch``), and extracts the frontier with the
-    sort-based O(n log n) Pareto. ``engine="reference"`` is the pre-caching
-    brute-force engine; at tolerance 0 both produce identical frontiers and
-    design points, at tolerance > 0 the fast frontier is the reference one
-    restricted to kept schedules and still contains the entire exact
-    frontier and every DP point (locked by the equivalence suite in
-    tests/test_dse.py).
+    The default ``engine="batched"`` shares one memoized graph analysis
+    across all Step-1 configs, scores the whole config sweep in one
+    vectorized pass (``repro.dse.batched``), generates **zero** instructions
+    (codegen runs only when a point is deployed), prunes cost-dominated
+    member configs from the Step-2 composition (margin-aware at
+    ``tolerance > 0``, see ``enumerate_multi_batch``), and extracts the
+    frontier with the sort-based O(n log n) Pareto. ``engine="scalar"``
+    (alias ``"fast"``: the historical default) is identical except Step 1
+    runs one ``place()`` per config; ``engine="reference"`` is the
+    pre-caching brute-force engine. At tolerance 0 all three produce
+    identical frontiers and design points, at tolerance > 0 the fast
+    frontiers are the reference one restricted to kept schedules and still
+    contain the entire exact frontier and every DP point (locked by the
+    equivalence suite in tests/test_dse.py).
 
     ``validate=N`` deploys + simulates up to N schedules (the design points
     DP-A/C/B first, then the throughput-ordered multi-batch frontier) and
@@ -716,8 +862,7 @@ def explore(g, *, n_pu1x: int = 5, n_pu2x: int = 5,
     decode workloads validate over one full decode window (not
     ``validate_rounds``) so the cross-check covers the whole
     advancing-length cycle."""
-    if engine not in ("fast", "reference"):
-        raise ValueError(f"unknown engine {engine!r}")
+    engine = _normalize_engine(engine)
     workload = None
     if not isinstance(g, Graph):
         from ..deploy import Workload
@@ -725,9 +870,13 @@ def explore(g, *, n_pu1x: int = 5, n_pu2x: int = 5,
         workload = Workload.of(g)
         g = workload.graph
     pus = pus if pus is not None else make_u50_system()
-    fast = engine == "fast"
-    enum = enumerate_single_batch if fast else enumerate_single_batch_reference
-    single = enum(g, n_pu1x=n_pu1x, n_pu2x=n_pu2x, pus=pus)
+    fast = engine != "reference"
+    if fast:
+        single = enumerate_single_batch(g, n_pu1x=n_pu1x, n_pu2x=n_pu2x,
+                                        pus=pus, engine=engine)
+    else:
+        single = enumerate_single_batch_reference(g, n_pu1x=n_pu1x,
+                                                  n_pu2x=n_pu2x, pus=pus)
     # margin-aware pruning stays engaged at tolerance > 0 (see
     # enumerate_multi_batch); a negative tolerance shrinks the frontier and
     # would make any prune unsound, so only that degenerate case sweeps

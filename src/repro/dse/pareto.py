@@ -26,6 +26,26 @@ def _threshold(v: float, tolerance: float) -> float:
     return v * (1 + tolerance) if v >= 0 else v * (1 - tolerance)
 
 
+def _vectorized_keep(vals: list[list[float]], tolerance: float) -> list[int]:
+    """NumPy pairwise dominance scan — the same O(n²·k) comparisons as
+    ``_bruteforce_keep`` as array ops (identical float arithmetic and
+    comparison semantics, NaN/inf included), for the >= 3-objective path
+    (multi-tenant rate vectors) where n reaches the thousands. Blocked over
+    the candidate axis to bound the broadcast to ~n·512·k."""
+    import numpy as np
+
+    n = len(vals)
+    V = np.asarray(vals, dtype=np.float64)
+    T = np.where(V >= 0.0, V * (1.0 + tolerance), V * (1.0 - tolerance))
+    keep: list[int] = []
+    for j0 in range(0, n, 512):
+        ge = (V[:, None, :] >= T[None, j0:j0 + 512, :]).all(axis=2)
+        gt = (V[:, None, :] > V[None, j0:j0 + 512, :]).any(axis=2)
+        dom = (ge & gt).any(axis=0)
+        keep.extend(int(j0 + k) for k in np.nonzero(~dom)[0])
+    return keep
+
+
 def _bruteforce_keep(vals: list[list[float]], tolerance: float) -> list[int]:
     """O(n²) pairwise dominance scan; returns kept indices in input order."""
     n = len(vals)
@@ -114,6 +134,12 @@ def pareto_front(
     if (len(objectives) == 2 and tolerance >= 0.0
             and all(math.isfinite(v) for row in vals for v in row)):
         keep = _sorted_keep_2d(vals, tolerance)
+    elif (len(vals) >= 32
+          and all(isinstance(v, float) for row in vals for v in row)):
+        # float64 round-trips losslessly, so the numpy scan's comparisons
+        # are the exact Python ones; non-float objectives (e.g. huge ints)
+        # stay on the pure-Python scan to avoid conversion rounding.
+        keep = _vectorized_keep(vals, tolerance)
     else:
         keep = _bruteforce_keep(vals, tolerance)
     return [points[j] for j in keep]

@@ -1,0 +1,253 @@
+"""Batched DSE engine tests (the vectorized scorer of ``repro.dse.batched``
+and the incremental ``explore_multi(prev=...)`` path).
+
+Locks the three guarantees the vectorized engine ships with:
+
+* the numpy backend is **byte-identical** to the scalar ``place()`` path —
+  per config and per metric, including the coupling decomposition
+  (uncoupled max-stage time, credit-loop binding bound, round period);
+* the ``AnalysisTables`` dense export reconstructs exactly the partition
+  DP and stage overheads the scalar compiler computes;
+* ``explore_multi(prev=...)`` reuses surviving tenants' Step-1 caches and
+  seeds the incumbent set without changing the result: frontier and
+  balanced point equal the from-scratch run, with exactly one fresh
+  analysis for the changed tenant.
+
+The JAX backend is tolerance-locked (XLA reassociates and FMA-fuses, so
+byte equality is out of scope by design).
+"""
+import math
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.compiler import STATS, analyze, clear_analysis_cache, place, zoo
+from repro.compiler.partition import partition
+from repro.core.pu import make_u50_system
+from repro.dse import explore_multi, score_details, score_single_batch
+from repro.dse.explorer import _point_of, enumerate_single_batch
+
+
+def _zoo_graphs():
+    return [
+        zoo.tiny_cnn(channels=(16, 32, 32), hw=16),
+        zoo.transformer_encoder("qwen3-0.6b", seq_len=64, depth=1),
+        zoo.transformer_decoder("qwen3-0.6b", seq_len=64, decode_steps=8,
+                                depth=2),
+    ]
+
+
+ZOO_IDS = ["tiny_cnn", "qwen3_enc", "qwen3_dec"]
+
+
+class TestBatchedScoringEquivalence:
+    """Numpy-backend scoring is byte-identical to the scalar place() path."""
+
+    @pytest.mark.parametrize("gi", [0, 1, 2], ids=ZOO_IDS)
+    def test_batched_equals_scalar_points(self, gi):
+        g = _zoo_graphs()[gi]
+        bat = enumerate_single_batch(g, engine="batched")
+        scl = enumerate_single_batch(g, engine="scalar")
+        assert bat == scl  # dataclass equality: every field, every config
+
+    @pytest.mark.parametrize("budget", [(3, 2), (1, 4), (5, 5)])
+    def test_batched_equals_scalar_nondefault_budgets(self, budget):
+        a, b = budget
+        g = _zoo_graphs()[0]
+        bat = enumerate_single_batch(g, n_pu1x=a, n_pu2x=b, engine="batched")
+        scl = enumerate_single_batch(g, n_pu1x=a, n_pu2x=b, engine="scalar")
+        assert bat == scl
+        assert len(bat) == (a + 1) * (b + 1) - 1
+
+    @pytest.mark.parametrize("gi", [0, 1, 2], ids=ZOO_IDS)
+    def test_score_details_matches_place_decomposition(self, gi):
+        """Beyond the point metrics, the coupling decomposition (round
+        period, uncoupled max-stage time, credit-loop binding bound) must
+        match the scalar model float-for-float per config."""
+        g = _zoo_graphs()[gi]
+        pus = make_u50_system()
+        an = analyze(g, pus)
+        configs = [(a, b) for a in range(6) for b in range(6) if a + b > 0]
+        sc = score_details(an, configs, pus=pus)
+        assert sc.configs == configs
+        for j, (a, b) in enumerate(configs):
+            cm = place(an, a, b, pus=pus)
+            assert sc.fps[j] == cm.predicted_fps
+            assert sc.latency[j] == cm.predicted_latency
+            assert sc.tops[j] == cm.used_tops
+            assert sc.pbe[j] == cm.pbe()
+            assert sc.round_seconds[j] == cm.coupling.round_seconds
+            assert sc.uncoupled_seconds[j] == cm.coupling.uncoupled_seconds
+            assert sc.binding_bound[j] == max(
+                (bb.bound_seconds for bb in cm.coupling.bounds), default=0.0)
+
+    def test_score_single_batch_wraps_details(self):
+        g = _zoo_graphs()[0]
+        pus = make_u50_system()
+        an = analyze(g, pus)
+        configs = [(1, 0), (2, 3), (0, 1)]
+        pts = score_single_batch(an, configs, pus=pus)
+        assert [p.config for p in pts] == configs
+        for p in pts:
+            assert p == _point_of(place(an, p.a, p.b, pus=pus), p.a, p.b)
+
+    def test_budget_exceeding_pool_raises(self):
+        """A config whose reconstructed stages outnumber the PU pool fails
+        the same way the scalar path does (a graph with few segments can
+        absorb an oversized budget in both engines — the partition caps the
+        stage count)."""
+        g = _zoo_graphs()[0]  # few segments: absorbs an oversized budget
+        pus = make_u50_system()
+        an = analyze(zoo.transformer_encoder("qwen3-0.6b", seq_len=64,
+                                             depth=2), pus)
+        with pytest.raises(ValueError, match="no free PU1x"):
+            place(an, 6, 0, pus=pus)
+        with pytest.raises(ValueError, match="no free PU1x"):
+            score_details(an, [(6, 0)], pus=pus)
+        # few segments: both engines absorb the oversized budget instead
+        an_small = analyze(g, pus)
+        assert (score_details(an_small, [(6, 0)], pus=pus).fps[0]
+                == place(an_small, 6, 0, pus=pus).predicted_fps)
+
+    def test_unknown_backend_and_engine_rejected(self):
+        g = _zoo_graphs()[0]
+        an = analyze(g, make_u50_system())
+        with pytest.raises(ValueError):
+            score_details(an, [(1, 0)], backend="warp")
+        with pytest.raises(ValueError):
+            enumerate_single_batch(g, engine="reference")
+
+    if HAVE_HYPOTHESIS:
+
+        @settings(max_examples=8, deadline=None)
+        @given(
+            a_budget=st.integers(min_value=1, max_value=5),
+            b_budget=st.integers(min_value=0, max_value=5),
+            channels=st.sampled_from([(4, 8, 8), (8, 16, 16), (16, 32, 32)]),
+        )
+        def test_random_zoo_and_budget_property(self, a_budget, b_budget,
+                                                channels):
+            g = zoo.tiny_cnn(channels=channels, hw=16)
+            bat = enumerate_single_batch(g, n_pu1x=a_budget, n_pu2x=b_budget,
+                                         engine="batched")
+            scl = enumerate_single_batch(g, n_pu1x=a_budget, n_pu2x=b_budget,
+                                         engine="scalar")
+            assert bat == scl
+
+
+class TestAnalysisTables:
+    """The dense export reconstructs the scalar partition DP exactly."""
+
+    @pytest.mark.parametrize("gi", [0, 1, 2], ids=ZOO_IDS)
+    def test_reconstruct_matches_partition(self, gi):
+        g = _zoo_graphs()[gi]
+        an = analyze(g, make_u50_system())
+        tab = an.tables()
+        for a in range(4):
+            for b in range(4):
+                if a + b == 0:
+                    continue
+                stages = tab.reconstruct(a, b)
+                ref = partition(an.graph, an.profiles, a, b,
+                                memo=an._partition_memo)
+                assert stages == ref.stages  # kind, nids and time per stage
+
+    def test_tables_cached_on_analysis(self):
+        an = analyze(_zoo_graphs()[0], make_u50_system())
+        assert an.tables() is an.tables()  # built once, then reused
+
+
+@pytest.mark.skipif("not __import__('importlib').util.find_spec('jax')")
+class TestJaxBackend:
+    """The jit/vmap backend tracks the exact numpy path within float
+    tolerance (XLA may reassociate and FMA-fuse, so no byte equality)."""
+
+    def test_jax_close_to_numpy(self):
+        import numpy as np
+
+        g = _zoo_graphs()[1]
+        pus = make_u50_system()
+        an = analyze(g, pus)
+        configs = [(a, b) for a in range(4) for b in range(4) if a + b > 0]
+        ref = score_details(an, configs, pus=pus, backend="numpy")
+        jx = score_details(an, configs, pus=pus, backend="jax")
+        for field in ("fps", "latency", "tops", "pbe", "round_seconds",
+                      "uncoupled_seconds", "binding_bound"):
+            np.testing.assert_allclose(getattr(jx, field),
+                                       getattr(ref, field),
+                                       rtol=1e-9, atol=1e-12)
+
+
+class TestIncrementalExploreMulti:
+    """``explore_multi(prev=...)`` equals from-scratch and re-scores only
+    the changed tenant."""
+
+    def _tenants(self):
+        return [
+            zoo.tiny_cnn(channels=(16, 32, 32), hw=16),
+            zoo.transformer_encoder("qwen3-0.6b", seq_len=64, depth=1),
+            zoo.tiny_cnn(channels=(8, 16, 16), hw=16),
+        ]
+
+    def test_swap_one_tenant_matches_scratch(self):
+        graphs = self._tenants()
+        base = explore_multi(graphs)
+        swapped = self._tenants()
+        swapped[2] = zoo.tiny_cnn(channels=(4, 8, 8), hw=8)
+        clear_analysis_cache()
+        STATS.reset()
+        inc = explore_multi(swapped, prev=base)
+        # only the swapped-in tenant is analyzed; survivors ride prev's
+        # Step-1 caches by identity
+        assert STATS.snapshot()["analysis_misses"] == 1
+        assert inc.singles[0] is base.singles[0]
+        assert inc.singles[1] is base.singles[1]
+        scratch = explore_multi(swapped)
+        assert inc.frontier == scratch.frontier
+        assert inc.balanced == scratch.balanced
+
+    def test_add_and_drop_tenant(self):
+        pair = self._tenants()[:2]
+        base = explore_multi(pair)
+        # add a tenant
+        grown = pair + [zoo.tiny_cnn(channels=(4, 8, 8), hw=8)]
+        inc = explore_multi(grown, prev=base)
+        assert inc.frontier == explore_multi(grown).frontier
+        # drop back to two tenants, reusing the 3-tenant result
+        shrunk = explore_multi(pair, prev=inc)
+        assert shrunk.frontier == base.frontier
+        assert shrunk.balanced == base.balanced
+
+    def test_budget_mismatch_ignores_prev(self):
+        graphs = self._tenants()
+        base = explore_multi(graphs)  # 5+5 budget
+        clear_analysis_cache()
+        STATS.reset()
+        inc = explore_multi(graphs, n_pu1x=4, n_pu2x=4, prev=base)
+        # prev unusable -> every tenant re-analyzed (3 distinct graphs)
+        assert STATS.snapshot()["analysis_misses"] == 3
+        assert inc.frontier == explore_multi(graphs, n_pu1x=4,
+                                             n_pu2x=4).frontier
+
+    def test_prev_with_tolerance_matches_scratch(self):
+        graphs = self._tenants()
+        base = explore_multi(graphs, tolerance=0.05)
+        swapped = self._tenants()
+        swapped[2] = zoo.tiny_cnn(channels=(4, 8, 8), hw=8)
+        inc = explore_multi(swapped, tolerance=0.05, prev=base)
+        scratch = explore_multi(swapped, tolerance=0.05)
+        assert inc.frontier == scratch.frontier
+        assert inc.balanced == scratch.balanced
+
+    def test_result_records_budget_and_fingerprints(self):
+        graphs = self._tenants()
+        res = explore_multi(graphs, n_pu1x=3, n_pu2x=4)
+        assert (res.n_pu1x, res.n_pu2x) == (3, 4)
+        assert res.fingerprints == tuple(
+            w.graph.fingerprint() for w in res.workloads)

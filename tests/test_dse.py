@@ -198,10 +198,11 @@ class TestFastEngineEquivalence:
     and design points vs. the brute-force reference path (which recompiles
     everything per config, composes unpruned, and uses the O(n²) Pareto)."""
 
+    @pytest.mark.parametrize("engine", ["batched", "scalar", "fast"])
     @pytest.mark.parametrize("gi", [0, 1], ids=["tiny_cnn", "qwen3_enc"])
-    def test_explore_identical(self, gi):
+    def test_explore_identical(self, gi, engine):
         g = _graphs_under_test()[gi]
-        fast = explore(g)
+        fast = explore(g, engine=engine)
         ref = explore(g, engine="reference")
         assert fast.single == ref.single
         assert fast.single_frontier == ref.single_frontier
@@ -243,6 +244,12 @@ class TestFastEngineEquivalence:
         pair = _graphs_under_test()
         fast = explore_multi(pair, tolerance=tol)
         ref = explore_multi(pair, engine="reference", tolerance=tol)
+        scalar = explore_multi(pair, engine="scalar", tolerance=tol)
+        # scalar and batched share the pruned recursion; only Step-1
+        # scoring differs, and it is byte-identical
+        assert scalar.points == fast.points
+        assert scalar.frontier == fast.frontier
+        assert scalar.balanced == fast.balanced
         assert ({p.configs for p in fast.frontier}
                 == {p.configs for p in ref.frontier})
         assert sorted(p.fps for p in fast.frontier) == sorted(
@@ -431,6 +438,12 @@ PARETO_EXAMPLES = [
     [(-1.0, -2.0), (-2.0, -1.0), (-1.5, -1.5)],  # negative objectives
     [(3.0, 1.0), (2.0, 2.0), (1.0, 3.0), (2.5, 0.5), (0.5, 2.5)],
     [(1.0, 5.0), (1.0, 4.0), (2.0, 5.0)],  # equal-f1 group with dominated
+    # duplicated frontier pairs: every copy of a kept point is kept
+    [(1.0, 2.0), (1.0, 2.0), (2.0, 1.0), (2.0, 1.0)],
+    [(1.0, 1.0), (1.0, 1.0), (1.0, 1.0)],  # all identical
+    # duplicate dominator + partial ties along each axis
+    [(2.0, 2.0), (2.0, 1.0), (1.0, 2.0), (2.0, 2.0)],
+    [(0.0, -0.0), (-0.0, 0.0), (0.0, 0.0)],  # signed-zero ties
 ]
 
 
@@ -445,6 +458,19 @@ def test_pareto_three_objectives_uses_bruteforce():
     objs = [lambda v: v[0], lambda v: v[1], lambda v: v[2]]
     assert pareto_front(pts, objs) == pareto_front_bruteforce(pts, objs)
     assert (1.0, 1.0, 1.0) not in pareto_front(pts, objs)
+
+
+@pytest.mark.parametrize("tolerance", [0.0, 0.01, 0.25])
+def test_pareto_multiobjective_vectorized_matches_oracle(tolerance):
+    """Lists of >= 32 all-float rows take the numpy pairwise scan for >= 3
+    objectives (the multi-tenant rate vectors) — same keep-set and order as
+    the pure-Python oracle, ties and duplicates included."""
+    base = [(float(i % 4) / 2.0, float((i * 7) % 5) / 2.0,
+             float((i * 3) % 4) / 2.0) for i in range(12)]
+    pts = [base[(i * 5) % len(base)] for i in range(64)]  # heavy duplication
+    objs = [lambda v: v[0], lambda v: v[1], lambda v: v[2]]
+    assert pareto_front(pts, objs, tolerance=tolerance) == \
+        pareto_front_bruteforce(pts, objs, tolerance=tolerance)
 
 
 if HAVE_HYPOTHESIS:
@@ -464,6 +490,33 @@ if HAVE_HYPOTHESIS:
         keep-set (same points, same order) for any finite 2-objective input,
         tolerance included."""
         _check_matches_oracle(vals, tolerance)
+
+    @settings(max_examples=200, deadline=None)
+    @given(data=st.data())
+    def test_pareto_tie_heavy_matches_oracle_property(data):
+        """Duplicate-forcing regression: rows sampled from a small base
+        pool guarantee exact duplicates and threshold-coinciding values —
+        the historical worst case for sweep-based Pareto filters."""
+        base = data.draw(st.lists(point2, min_size=1, max_size=6))
+        n = data.draw(st.integers(min_value=1, max_value=40))
+        vals = [data.draw(st.sampled_from(base)) for _ in range(n)]
+        tolerance = data.draw(st.sampled_from([0.0, 1e-9, 0.05, 0.25]))
+        _check_matches_oracle(vals, tolerance)
+
+    point3 = st.tuples(st.one_of(finite, gridded), st.one_of(finite, gridded),
+                       st.one_of(finite, gridded))
+
+    @settings(max_examples=100, deadline=None)
+    @given(vals=st.lists(point3, min_size=32, max_size=48),
+           tolerance=st.sampled_from([0.0, 0.05]))
+    def test_pareto_vectorized_3obj_matches_oracle_property(vals, tolerance):
+        """>= 32 rows and 3 objectives route through the numpy pairwise
+        scan; the keep-set must equal the pure-Python oracle exactly."""
+        objectives = [lambda v: v[0], lambda v: v[1], lambda v: v[2]]
+        fast = pareto_front(vals, objectives, tolerance=tolerance)
+        oracle = pareto_front_bruteforce(vals, objectives,
+                                         tolerance=tolerance)
+        assert fast == oracle
 
     @settings(max_examples=100, deadline=None)
     @given(vals=st.lists(point2, min_size=1, max_size=25))
