@@ -41,7 +41,8 @@ import time
 from repro.compiler import zoo
 from repro.core import Group, MultiPUSimulator, latency_matrix, make_u50_system
 from repro.core.demo import GemmShape, build_two_pu_pipeline
-from repro.deploy import System, compile_deployment
+from repro.deploy import SLO, Strategy, System, compile_deployment
+from repro.serve import Request, Server
 from repro.dse import explore, explore_multi
 
 GOPS_224EQ_PER_FRAME = 7.72  # canonical ResNet-50 GOPs (224x224, Table III)
@@ -276,7 +277,8 @@ def multi_tenant_point() -> list[str]:
     system = System()
     best_solo = max(res.singles[0], key=lambda p: p.fps)
     sim_solo = system.load(
-        compile_deployment(g_res, best_solo.config, rounds=5)).run()
+        compile_deployment(g_res, Strategy.single(*best_solo.config),
+                           rounds=5)).run()
     dep = res.deploy(pick, rounds=4)
     t0 = time.perf_counter()
     sim = system.switch(dep).run()  # same PU array, two tenants now
@@ -314,7 +316,8 @@ def decode_point() -> list[str]:
         )
 
     system = System()
-    sim_pre = system.load(compile_deployment(prefill, (2, 2), rounds=4)).run()
+    sim_pre = system.load(compile_deployment(prefill, Strategy.single(2, 2),
+                                             rounds=4)).run()
     dep = dse.deploy(dse.dp_a)  # rounds default to the decode window
     t0 = time.perf_counter()
     sim = system.switch(dep).run()
@@ -326,6 +329,48 @@ def decode_point() -> list[str]:
         f"decode_tok_s={tok_s:.1f};steps={sim.members[0].rounds};"
         f"pred_err={abs(tok_s - dep.predicted_throughput)/dep.predicted_throughput:.3f};"
         f"deadlock={int(sim.deadlocked)};loads={len(system.history)};reconfigured=0"
+    )
+    return rows
+
+
+def serving_point() -> list[str]:
+    """Online serving control plane: two tenants with different SLOs share
+    one machine, their decode sessions continuously batched into slot-packed
+    members (per-slot AddrLen streams); a third tenant joins mid-service,
+    triggering an incremental re-placement and a hot swap. Reported through
+    the unified :class:`repro.deploy.RunReport` schema."""
+    srv = Server()
+    srv.join("chat", depth=2, max_slots=2, window=8,
+             slo=SLO(min_tokens_per_s=100.0, priority=1))
+    srv.join("batch", depth=2, max_slots=2, window=8)
+    for p, n in ((128, 24), (64, 16), (96, 32)):
+        srv.submit(Request("chat", prompt_tokens=p, max_new_tokens=n))
+    for p, n in ((256, 32), (192, 16)):
+        srv.submit(Request("batch", prompt_tokens=p, max_new_tokens=n))
+    srv.step()  # serve one window before the third tenant arrives
+    srv.join("burst", depth=2, max_slots=1, window=8)
+    srv.submit(Request("burst", prompt_tokens=32, max_new_tokens=16,
+                       arrival_s=srv.now))
+    t0 = time.perf_counter()
+    rep = srv.drain()
+    wall_us = (time.perf_counter() - t0) * 1e6
+    rows = []
+    for name, t in sorted(rep.tenants.items()):
+        attain = ("" if t.slo_attainment is None
+                  else f";slo_attain={t.slo_attainment:.2f}")
+        rows.append(
+            f"serve.tenant_{name},,tok_s={t.token_rate:.1f};"
+            f"tokens={t.tokens};p50_ms={t.latency_p50 * 1e3:.2f};"
+            f"p95_ms={t.latency_p95 * 1e3:.2f}{attain}"
+        )
+    kinds = [e.kind for e in srv.events]
+    completed = sum(r.completed for r in srv.requests)
+    rows.append(
+        f"serve.control_plane,{wall_us:.0f},"
+        f"windows={srv.windows};swaps={kinds.count('swap')};"
+        f"replans={kinds.count('replan')};evictions={kinds.count('evict')};"
+        f"completed={completed}/{len(srv.requests)};"
+        f"tokens={rep.total_tokens};wall_s={rep.wall_s:.4f}"
     )
     return rows
 
@@ -343,6 +388,7 @@ def run() -> list[str]:
     out += transformer_point()
     out += multi_tenant_point()
     out += decode_point()
+    out += serving_point()
     return out
 
 
@@ -354,32 +400,39 @@ def ci_points() -> list[dict]:
     tolerances the conformance tests lock in (tests/test_deploy.py)."""
     from repro.configs import get_config
 
-    dp_c = [(1, 0)] * 5 + [(0, 1)] * 5
+    dp_c = Strategy.multi([(1, 0)] * 5 + [(0, 1)] * 5)
     plan = [
         # (point name, graph, strategy, rounds override, tolerance)
         ("tiny_cnn.dp_a", zoo.tiny_cnn(channels=(16, 32, 32), hw=16),
-         (5, 5), 6, 0.08),
+         Strategy.single(5, 5), 6, 0.08),
         ("tiny_cnn.dp_c", zoo.tiny_cnn(channels=(16, 32, 32), hw=16),
          dp_c, 5, 0.03),
         # fixed (2,2)+(3,3) hybrid (not the explore-selected DP-B, which the
         # conformance tests lock at 4.5%): observed 5.1%, guarded at 6%
         ("tiny_cnn.hybrid", zoo.tiny_cnn(channels=(16, 32, 32), hw=16),
-         [(2, 2), (3, 3)], 5, 0.06),
+         Strategy.multi([(2, 2), (3, 3)]), 5, 0.06),
         ("qwen3_enc.dp_a", zoo.transformer_encoder("qwen3-0.6b", seq_len=64,
-                                                   depth=1), (2, 2), 5, 0.08),
+                                                   depth=1),
+         Strategy.single(2, 2), 5, 0.08),
         # decode points tightened 10% -> 5% with the pipeline coupling model
         # (residual serialization, HBM port contention, credit-loop bound)
         ("qwen3_dec.dp_a", zoo.transformer_decoder("qwen3-0.6b", seq_len=64,
                                                    decode_steps=8, depth=4),
-         (5, 5), None, 0.05),
+         Strategy.single(5, 5), None, 0.05),
         ("qwen3_dec_reduced.dp_c",
          zoo.transformer_decoder(get_config("qwen3-0.6b").reduced(),
                                  seq_len=64, decode_steps=8, depth=4),
          dp_c, None, 0.05),
+        # slot-packed decode: two sessions at different cache depths share
+        # one member via per-slot AddrLen streams (continuous batching)
+        ("qwen3_dec_packed.2slot",
+         zoo.transformer_decoder("qwen3-0.6b", slots=(64, 32),
+                                 decode_steps=8, depth=1),
+         Strategy.single(2, 2), None, 0.05),
         # ten single-node tiny stages: the credit loop binds here — the
         # uncoupled model used to run 15-20% hot on this shape
         ("deep_chain.dp_a", zoo.linear_chain(10, ch=8, hw=8),
-         (5, 5), 10, 0.03),
+         Strategy.single(5, 5), 10, 0.03),
     ]
     points = []
     for name, g, strategy, rounds, tol in plan:

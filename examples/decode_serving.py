@@ -17,7 +17,7 @@ runtime strategy switching applied to the two phases of LLM serving.
 import argparse
 
 from repro.compiler import zoo
-from repro.deploy import System, compile_deployment
+from repro.deploy import Strategy, System, compile_deployment
 from repro.dse import explore
 
 
@@ -57,7 +57,7 @@ def main() -> None:
         return
 
     # --- prefill tenant -> decode tenant on one fixed machine ---------------
-    dep_pre = compile_deployment(prefill, (2, 2), rounds=4)
+    dep_pre = compile_deployment(prefill, Strategy.single(2, 2), rounds=4)
     dep_dec = res.deploy(res.dp_a)  # rounds default to the decode window
 
     system = System()

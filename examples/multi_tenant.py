@@ -15,7 +15,7 @@ it mid-session — new instruction programs only, no reconfiguration.
 import argparse
 
 from repro.compiler import zoo
-from repro.deploy import System, compile_deployment
+from repro.deploy import Strategy, System, compile_deployment
 from repro.dse import explore_multi
 
 
@@ -53,7 +53,8 @@ def main() -> None:
 
     # --- a running single-tenant session hot-swaps to the two-tenant split --
     best_a = max(res.singles[0], key=lambda p: p.fps)
-    dep_solo = compile_deployment(g_a, best_a.config, rounds=args.rounds + 1)
+    dep_solo = compile_deployment(g_a, Strategy.single(*best_a.config),
+                                  rounds=args.rounds + 1)
     dep_two = res.deploy(pick, rounds=args.rounds)
 
     system = System()

@@ -38,6 +38,7 @@ class OpType(enum.Enum):
     LAYERNORM = "LayerNorm"  # vector-unit normalization (LN / RMSNorm)
     GELU = "Gelu"  # vector-unit activation (folded into PROJ by fusion)
     MUL = "Mul"  # elementwise gate multiply (SwiGLU), vector unit
+    CONCAT = "Concat"  # row-wise gather of per-slot tensors, vector unit
 
 
 # GEMM-shaped ops that carry weights streamed/preloaded into URAM.
@@ -158,7 +159,7 @@ class Node:
     def is_compute(self) -> bool:
         return (self.op in WEIGHTED_OPS or self.op in ATTN_GEMM_OPS
                 or self.op in (OpType.MAXPOOL, OpType.AVGPOOL, OpType.SOFTMAX,
-                               OpType.LAYERNORM, OpType.MUL))
+                               OpType.LAYERNORM, OpType.MUL, OpType.CONCAT))
 
 
 @dataclass

@@ -391,9 +391,98 @@ def _decoder_block(g: Graph, x: TensorInfo, heads: int, kv_heads: int,
     return _ffn(g, h, x.shape[1], d_ff, mlp, name)
 
 
+def _packed_decode_attention(g: Graph, x: TensorInfo, heads: int, kv_heads: int,
+                             head_dim: int, slot_rows: tuple[int, ...],
+                             steps: int, name: str) -> TensorInfo:
+    """Slot-packed self-attention: S concurrent decode sessions, one token
+    each per round, against *independent per-slot* K/V cache regions.
+
+    Generalizes :func:`_decode_attention`'s single LEN counter to one
+    AddrLen length stream per slot: each session j carries its own prefix
+    depth ``slot_rows[j]``, so its cache tensor gets its own
+    ``kv_base_rows`` and therefore its own advancing-length read stream and
+    append cursor in the compiled programs. The Q/K/V and output projections
+    batch all S tokens through one GEMM (N=S) — the continuous-batching
+    win: resident weights are streamed once per round for the whole pack —
+    while score/softmax/context stay per-slot (each attends over its own
+    prefix). A CONCAT vector op gathers the per-slot context rows back into
+    the (S, H*hd) token tensor for the shared output projection.
+
+    Per-slot score/context nodes read the full packed Q region at this
+    fidelity (one row is live per slot); LD-side traffic of the tiny Q/ctx
+    tensors is charged identically by the analytic model and the simulator,
+    so conformance is unaffected."""
+    s, d = x.shape
+    assert s == len(slot_rows), f"{name}: one token per packed slot"
+    kv_dim = kv_heads * head_dim
+
+    q = _proj(g, x, heads * head_dim, f"{name}.wq")
+
+    kcaches, vcaches = [], []
+    for j, rows in enumerate(slot_rows):
+        l_max = rows + steps
+        assert l_max <= 16383, \
+            f"{name}: slot {j} cache length is 14 bits ({l_max})"
+        kcaches.append(g.add_tensor(f"{name}.kcache{j}", (l_max, kv_dim),
+                                    kv_base_rows=rows))
+        vcaches.append(g.add_tensor(f"{name}.vcache{j}", (l_max, kv_dim),
+                                    kv_base_rows=rows))
+    # One projection GEMM computes all S new K (resp. V) rows; the store
+    # side appends row j to slot j's region (multi-output broadcast store,
+    # one row-sized DataMove per slot with the hold bit chaining them).
+    g.add_node(name=f"{name}.wk", op=OpType.PROJ, inputs=[x.tid],
+               outputs=[kc.tid for kc in kcaches],
+               m=kv_dim, n=s, k=d, scale_shift=7)
+    g.add_node(name=f"{name}.wv", op=OpType.PROJ, inputs=[x.tid],
+               outputs=[vc.tid for vc in vcaches],
+               m=kv_dim, n=s, k=d, scale_shift=7)
+
+    ctxs = []
+    for j, rows in enumerate(slot_rows):
+        l_max = rows + steps
+        n_avg = max(1, round(rows + (steps + 1) / 2))  # slot j mean length
+        assert heads * n_avg <= 65535, \
+            f"{name}: slot {j} score-GEMM N is 16 bits"
+        scores = g.add_tensor(f"{name}.scores{j}", (heads, l_max))
+        g.add_node(name=f"{name}.score{j}", op=OpType.ATTN_SCORE,
+                   inputs=[q.tid, kcaches[j].tid], outputs=[scores.tid],
+                   m=1, n=heads * n_avg, k=head_dim, scale_shift=7)
+        probs = g.add_tensor(f"{name}.probs{j}", (heads, l_max))
+        g.add_node(name=f"{name}.softmax{j}", op=OpType.SOFTMAX,
+                   inputs=[scores.tid], outputs=[probs.tid],
+                   m=1, n=heads, k=n_avg)
+        ctx = g.add_tensor(f"{name}.ctx{j}", (1, heads * head_dim))
+        g.add_node(name=f"{name}.context{j}", op=OpType.ATTN_CONTEXT,
+                   inputs=[probs.tid, vcaches[j].tid], outputs=[ctx.tid],
+                   m=head_dim, n=heads, k=n_avg, scale_shift=7)
+        ctxs.append(ctx)
+
+    if s == 1:
+        cat = ctxs[0]
+    else:
+        cat = g.add_tensor(f"{name}.ctxcat", (s, heads * head_dim))
+        g.add_node(name=f"{name}.concat", op=OpType.CONCAT,
+                   inputs=[c.tid for c in ctxs], outputs=[cat.tid],
+                   m=1, n=s, k=heads * head_dim)
+    return _proj(g, cat, d, f"{name}.wo")
+
+
+def _packed_decoder_block(g: Graph, x: TensorInfo, heads: int, kv_heads: int,
+                          head_dim: int, d_ff: int, mlp: str,
+                          slot_rows: tuple[int, ...], steps: int,
+                          name: str) -> TensorInfo:
+    """Pre-norm packed decode block: LN -> slot-packed MHA -> +res -> FFN."""
+    attn_out = _packed_decode_attention(g, _layernorm(g, x, f"{name}.ln1"),
+                                        heads, kv_heads, head_dim, slot_rows,
+                                        steps, f"{name}.attn")
+    h = _token_add(g, attn_out, x, f"{name}.add1")
+    return _ffn(g, h, x.shape[1], d_ff, mlp, name)
+
+
 def transformer_decoder(arch="qwen3-0.6b", *, seq_len: int = 256,
                         decode_steps: int = 64,
-                        depth: int | None = None) -> Graph:
+                        depth: int | None = None,
+                        slots: tuple[int, ...] | None = None) -> Graph:
     """The decode half of the prefill->decode serving pair: ``depth`` blocks
     processing *one new token per program round* against per-block K/V cache
     regions pre-filled with ``seq_len`` tokens (the matching prefill graph is
@@ -401,27 +490,56 @@ def transformer_decoder(arch="qwen3-0.6b", *, seq_len: int = 256,
     :class:`repro.deploy.System` hot-swaps between the two with no
     reconfiguration). ``decode_steps`` sizes the append-only cache window:
     round r attends over ``seq_len + r + 1`` tokens, and deployments of this
-    graph default to ``decode_steps`` rounds (one full decode pass)."""
+    graph default to ``decode_steps`` rounds (one full decode pass).
+
+    ``slots`` packs S concurrent decode sessions at *different* cache depths
+    into the same graph (continuous batching): ``slots=(l0, l1, ...)`` gives
+    session j a private per-block K/V cache pre-filled with ``l_j`` tokens
+    (``seq_len`` is ignored), batches the weighted projections across all S
+    tokens, and keeps attention per-slot via independent AddrLen length
+    streams — see :func:`_packed_decode_attention`."""
     from ..configs import get_config
 
     cfg = get_config(arch) if isinstance(arch, str) else arch
     n_layers = depth if depth is not None else cfg.num_layers
     assert 1 <= decode_steps <= 128, \
         "decode window exceeds the 7-bit AddrCyc NC field (cache append side)"
-    assert seq_len + decode_steps <= 16383, \
-        "max cache length exceeds the 14-bit context-GEMM K field"
+    if slots is None:
+        assert seq_len + decode_steps <= 16383, \
+            "max cache length exceeds the 14-bit context-GEMM K field"
+        g = Graph(name=f"{cfg.name.replace('.', '_')}_dec{n_layers}"
+                       f"_s{seq_len}x{decode_steps}")
+        g.attrs.update(phase="decode", prefill_len=seq_len,
+                       decode_steps=decode_steps)
+        x = g.add_tensor("input", (1, cfg.d_model))
+        g.input_tensors = [x.tid]
+
+        t = x
+        for i in range(n_layers):
+            t = _decoder_block(g, t, cfg.num_heads, cfg.num_kv_heads,
+                               cfg.resolved_head_dim, cfg.d_ff, cfg.mlp,
+                               seq_len, decode_steps, f"block{i}")
+        t = _layernorm(g, t, "ln_f")
+        g.output_tensors = [t.tid]
+        g.validate_topological()
+        return g
+
+    slot_rows = tuple(int(r) for r in slots)
+    assert slot_rows and all(r >= 1 for r in slot_rows), \
+        "each packed slot needs a non-empty prefill prefix"
+    assert len(slot_rows) <= 64, "packed slot count is bounded at 64"
     g = Graph(name=f"{cfg.name.replace('.', '_')}_dec{n_layers}"
-                   f"_s{seq_len}x{decode_steps}")
-    g.attrs.update(phase="decode", prefill_len=seq_len,
-                   decode_steps=decode_steps)
-    x = g.add_tensor("input", (1, cfg.d_model))
+                   f"_p{'+'.join(str(r) for r in slot_rows)}x{decode_steps}")
+    g.attrs.update(phase="decode", prefill_len=max(slot_rows),
+                   decode_steps=decode_steps, slot_prefix_rows=slot_rows)
+    x = g.add_tensor("input", (len(slot_rows), cfg.d_model))
     g.input_tensors = [x.tid]
 
     t = x
     for i in range(n_layers):
-        t = _decoder_block(g, t, cfg.num_heads, cfg.num_kv_heads,
-                           cfg.resolved_head_dim, cfg.d_ff, cfg.mlp,
-                           seq_len, decode_steps, f"block{i}")
+        t = _packed_decoder_block(g, t, cfg.num_heads, cfg.num_kv_heads,
+                                  cfg.resolved_head_dim, cfg.d_ff, cfg.mlp,
+                                  slot_rows, decode_steps, f"block{i}")
     t = _layernorm(g, t, "ln_f")
     g.output_tensors = [t.tid]
     g.validate_topological()

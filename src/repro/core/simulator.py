@@ -34,12 +34,16 @@ class PipelineMember:
 
     ``workload`` names the model this member runs (empty for legacy
     single-model deployments) so per-member results of a mixed-model run
-    remain attributable to their tenant."""
+    remain attributable to their tenant. ``slots`` names the decode
+    sessions packed into this member (empty for unpacked members): one
+    program round then advances *every* packed session by one token, so
+    round accounting scales to token accounting by the slot count."""
 
     first_pid: int
     last_pid: int
     label: str = ""
     workload: str = ""
+    slots: tuple[str, ...] = ()
 
 
 def _steady_fps(round_ends: list[float], warmup: int, sys_clk_hz: float,
@@ -98,6 +102,26 @@ class MemberSimResult:
     def latency_seconds(self, skip_warmup: int = 1) -> float:
         return _mean_latency(self.round_latencies_cycles, skip_warmup, self.sys_clk_hz)
 
+    # -- slot-level accounting (packed decode members) -----------------------
+    @property
+    def n_slots(self) -> int:
+        """Decode sessions packed into this member (1 when unpacked)."""
+        return max(1, len(self.member.slots))
+
+    @property
+    def tokens(self) -> int:
+        """Tokens produced: every round advances each packed slot by one."""
+        return self.rounds * self.n_slots
+
+    def token_rate(self, warmup: int = 1) -> float:
+        """Steady-state tokens/s: the member round rate times the number of
+        packed sessions (equals ``throughput_fps`` for unpacked members)."""
+        return self.throughput_fps(warmup) * self.n_slots
+
+    def slot_tokens(self) -> dict[str, int]:
+        """Per-session token counts keyed by slot name."""
+        return {slot: self.rounds for slot in self.member.slots}
+
 
 @dataclass
 class SimResult:
@@ -141,6 +165,20 @@ class SimResult:
             out[m.workload] = out.get(m.workload, 0.0) + m.throughput_fps(warmup)
         if not out:
             out[""] = self.throughput_fps(warmup)
+        return out
+
+    def aggregate_token_rate(self, warmup: int = 1) -> float:
+        """System tokens/s: member round rates scaled by packed slot counts
+        (equals ``aggregate_fps`` when nothing is slot-packed)."""
+        if not self.members:
+            return self.throughput_fps(warmup)
+        return sum(m.token_rate(warmup) for m in self.members)
+
+    def tokens_by_workload(self) -> dict[str, int]:
+        """Token counts split per workload label (slot-aware rounds)."""
+        out: dict[str, int] = {}
+        for m in self.members:
+            out[m.workload] = out.get(m.workload, 0) + m.tokens
         return out
 
     def latency_seconds(self, skip_warmup: int = 1) -> float:

@@ -3,9 +3,13 @@
 # compile_deployment (how it lands on disjoint PU/channel slices, one graph
 # per member), Deployment (executable programs + analytic model), System
 # (one fixed machine, runtime strategy switching without reconfiguration —
-# including single-tenant <-> multi-tenant swaps).
+# including single-tenant <-> multi-tenant swaps), Session (the handle
+# load/switch return: tenants, current strategy, swap history), RunReport
+# (the unified result schema of run() and Server.drain()).
 from .deployment import DeployedMember, Deployment, compile_deployment
+from .report import SLO, RunReport, TenantReport
 from .resources import MemberResources, check_fits, partition_resources
+from .session import Session, SwapRecord
 from .strategy import Member, Strategy, Workload
 from .system import System
 
@@ -14,8 +18,13 @@ __all__ = [
     "Deployment",
     "Member",
     "MemberResources",
+    "RunReport",
+    "SLO",
+    "Session",
     "Strategy",
+    "SwapRecord",
     "System",
+    "TenantReport",
     "Workload",
     "check_fits",
     "compile_deployment",

@@ -81,6 +81,7 @@ class DeployedMember:
             last_pid=self.last_pid,
             label=f"m{self.index}({a},{b})",
             workload=self.workload.label,
+            slots=self.workload.slots,
         )
 
 

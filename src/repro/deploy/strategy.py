@@ -24,7 +24,20 @@ import numbers
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
+from .._deprecation import warn_deprecated
 from ..compiler.graph import Graph
+
+# Normalization layers the deprecation warning walks past, so the warning
+# is attributed to whoever actually wrote the legacy tuple form.
+_STRATEGY_SHIMS = ("repro.deploy.strategy", "repro.deploy.deployment")
+
+
+def _warn_tuple_strategy() -> None:
+    warn_deprecated(
+        "tuple-only Strategy member forms are deprecated: build strategies "
+        "with Strategy.single(a, b), Strategy.multi([Member(a, b), ...]) or "
+        "Strategy.tenants([(workload, a, b), ...])",
+        skip=_STRATEGY_SHIMS)
 
 
 @dataclass(frozen=True)
@@ -40,11 +53,18 @@ class Workload:
     keys per-member accounting in
     :class:`repro.core.simulator.MemberSimResult`; it defaults to the graph
     name.
+
+    ``slots`` names the decode sessions packed into this workload's member
+    (slot-packed decode graphs, ``transformer_decoder(slots=...)``): one
+    name per concurrent session, in slot order. It flows into
+    :class:`repro.core.simulator.PipelineMember` so round accounting scales
+    to per-session token accounting. Empty for unpacked workloads.
     """
 
     graph: Graph
     label: str = ""
     rounds: Optional[int] = None
+    slots: tuple[str, ...] = ()
 
     def __post_init__(self) -> None:
         if not isinstance(self.graph, Graph):
@@ -53,6 +73,13 @@ class Workload:
             object.__setattr__(self, "label", self.graph.name)
         if self.rounds is not None and self.rounds <= 0:
             raise ValueError(f"Workload.rounds must be positive, got {self.rounds}")
+        slots = tuple(str(s) for s in self.slots)
+        if not slots:
+            # slot-packed graphs carry their packing in attrs; default the
+            # slot ids so token accounting works without a serving layer
+            packed = self.graph.attrs.get("slot_prefix_rows") or ()
+            slots = tuple(f"slot{i}" for i in range(len(packed)))
+        object.__setattr__(self, "slots", slots)
 
     @staticmethod
     def of(obj: "Workload | Graph | None", label: str = "") -> "Optional[Workload]":
@@ -68,16 +95,18 @@ class Workload:
         if not isinstance(other, Workload):
             return NotImplemented
         return (self.graph is other.graph and self.label == other.label
-                and self.rounds == other.rounds)
+                and self.rounds == other.rounds and self.slots == other.slots)
 
     def __hash__(self) -> int:
-        return hash((id(self.graph), self.label, self.rounds))
+        return hash((id(self.graph), self.label, self.rounds, self.slots))
 
     def __str__(self) -> str:
         return self.label
 
     def __repr__(self) -> str:
         extra = f", rounds={self.rounds}" if self.rounds is not None else ""
+        if self.slots:
+            extra += f", slots={self.slots!r}"
         return f"Workload({self.label!r}{extra})"
 
 
@@ -238,9 +267,12 @@ class Strategy:
             return Strategy.multi(cfgs, name=name)
         seq = tuple(obj)
         if len(seq) == 2 and all(isinstance(x, numbers.Number) for x in seq):
+            _warn_tuple_strategy()
             return Strategy.single(*seq, name=name)
         if len(seq) == 3 and isinstance(seq[0], (Workload, Graph)):
             return Strategy.multi([seq], name=name)
+        if any(isinstance(m, (tuple, list)) and len(m) == 2 for m in seq):
+            _warn_tuple_strategy()
         return Strategy.multi(seq, name=name)
 
     def with_workload(self, workload: "Workload | Graph | None") -> "Strategy":

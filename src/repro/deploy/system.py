@@ -5,9 +5,18 @@ switches among deployment strategies — pipeline parallelism, batch-level
 parallelism, hybrids — purely by loading new instruction programs into the
 ICU BRAMs. :class:`System` is that story as an API:
 
-    system = System()                       # fixed make_u50_system() machine
-    system.load(deployment_a).run(rounds=6) # measure strategy A
-    system.switch(deployment_c).run()       # swap programs, same hardware
+    system = System()                        # fixed make_u50_system() machine
+    session = system.load(deployment_a)      # -> Session handle
+    session.run(rounds=6)                    # measure strategy A -> RunReport
+    session.switch(deployment_c).run()       # swap programs, same hardware
+
+``load``/``switch`` return a :class:`~repro.deploy.session.Session` — the
+handle carrying the active tenants, the current strategy and the swap
+history — and ``run`` returns a :class:`~repro.deploy.report.RunReport`
+(the unified result schema). Both are thin over the legacy objects: the
+session forwards unknown attributes to the system and the report to its
+``SimResult``, so historical chained forms (``system.load(dep).run()``)
+and result consumers keep working unchanged.
 
 ``switch`` is exactly ``load`` with a hardware-compatibility check against
 the *current* machine — it never rebuilds the PU array, only resets the
@@ -18,25 +27,28 @@ Deployments whose member sets differ in *model*, not just shape, swap the
 same way: going from a single-tenant DP-A to a two-tenant ResNet+ViT split
 (per-member :class:`~repro.deploy.Workload`) is still just new instruction
 programs on the unchanged PU array — no reconfiguration, and the per-tenant
-rates come back through ``SimResult.fps_by_workload``.
+rates come back through ``RunReport.fps_by_workload``.
 """
 from __future__ import annotations
 
 from typing import Optional
 
 from ..core.pu import PUSpec, make_u50_system
-from ..core.simulator import MultiPUSimulator, SimResult
+from ..core.simulator import MultiPUSimulator
 from .deployment import Deployment
+from .report import RunReport
+from .session import Session
 
 
 class System:
-    """A session over one fixed simulated machine, executing deployments."""
+    """One fixed simulated machine, executing hot-swappable deployments."""
 
     def __init__(self, pus: Optional[list[PUSpec]] = None, trace: bool = False) -> None:
         self.pus = list(pus) if pus is not None else make_u50_system()
         self.sim = MultiPUSimulator(self.pus, trace=trace)
         self.deployment: Optional[Deployment] = None
-        self.history: list[tuple[str, SimResult]] = []
+        self.session: Optional[Session] = None
+        self.history: list[tuple[str, RunReport]] = []
 
     # -- deployment lifecycle ------------------------------------------------
     def _check_compatible(self, deployment: Deployment) -> None:
@@ -53,17 +65,22 @@ class System:
             return ()
         return tuple(w.label for w in self.deployment.workloads)
 
-    def load(self, deployment: Deployment) -> "System":
-        """Stage ``deployment`` as the active strategy (chainable).
+    def load(self, deployment: Deployment) -> Session:
+        """Stage ``deployment`` as the active strategy; returns the
+        :class:`Session` handle (one per system lifetime, created on first
+        load; later loads/switches record onto the same handle).
 
         The deployment may serve any mix of workloads — a multi-tenant
         member set loads exactly like a single-model one, since only the
         instruction programs differ."""
         self._check_compatible(deployment)
         self.deployment = deployment
-        return self
+        if self.session is None:
+            self.session = Session(self)
+        self.session._record(deployment)
+        return self.session
 
-    def switch(self, deployment: Deployment) -> "System":
+    def switch(self, deployment: Deployment) -> Session:
         """Swap to another strategy on the *unchanged* hardware — including
         one whose members run different models (single-tenant -> multi-tenant
         and back).
@@ -75,9 +92,10 @@ class System:
         return self.load(deployment)
 
     def run(self, rounds: Optional[int] = None, *,
-            until_cycles: float = float("inf")) -> SimResult:
+            until_cycles: float = float("inf")) -> RunReport:
         """Execute the active deployment for ``rounds`` program rounds
-        (default: the round count it was compiled with)."""
+        (default: the round count it was compiled with). Returns the
+        unified :class:`RunReport` (forwards to its backing ``SimResult``)."""
         if self.deployment is None:
             raise RuntimeError("no deployment loaded — use System.load first")
         self.sim.reset()  # clear transient state; the PU array persists
@@ -86,5 +104,6 @@ class System:
             members=self.deployment.sim_members(),
             until_cycles=until_cycles,
         )
-        self.history.append((self.deployment.name, res))
-        return res
+        report = RunReport.from_sim(res)
+        self.history.append((self.deployment.name, report))
+        return report

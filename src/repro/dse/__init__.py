@@ -17,8 +17,11 @@ from .explorer import (
     explore_multi,
 )
 from .pareto import constrained, pareto_front, pareto_front_bruteforce
+from .replan import Placement, plan_placement
 
 __all__ = [
+    "Placement",
+    "plan_placement",
     "BatchedScores",
     "DSEResult",
     "score_details",

@@ -122,8 +122,12 @@ def _point_of(cm, a: int, b: int) -> SingleBatchPoint:
 def _normalize_engine(engine: str) -> str:
     """Canonical engine name: "batched" (vectorized scorer, the default),
     "scalar" (per-config ``place()``), "reference" (pre-caching brute
-    force). "fast" is the historical alias of the default engine."""
+    force). "fast" is the deprecated historical alias of the default."""
     if engine == "fast":
+        from .._deprecation import warn_deprecated
+        warn_deprecated(
+            'engine="fast" is deprecated; use engine="batched" (the '
+            "default vectorized scorer)", skip=("repro.dse.explorer",))
         return "batched"
     if engine not in ("batched", "scalar", "reference"):
         raise ValueError(f"unknown engine {engine!r}")

@@ -1,0 +1,22 @@
+# Online serving control plane (paper Sec. V, taken online): a queue-driven
+# Server packs concurrent decode sessions at different cache depths into
+# shared members (per-slot AddrLen length streams), re-places tenants on
+# join/leave or sustained SLO violation via incremental explore_multi, and
+# hot-swaps the running System mid-service.
+from ..deploy import SLO, RunReport, TenantReport
+from .request import (DecodeSession, Request, ServeEvent, TenantState,
+                      WindowSample)
+from .server import MAX_WINDOW, Server
+
+__all__ = [
+    "DecodeSession",
+    "MAX_WINDOW",
+    "Request",
+    "RunReport",
+    "Server",
+    "ServeEvent",
+    "SLO",
+    "TenantReport",
+    "TenantState",
+    "WindowSample",
+]

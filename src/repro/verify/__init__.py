@@ -21,7 +21,8 @@ from typing import Optional
 
 from ..core.program import PUProgram
 from ..core.pu import PUSpec
-from .hazard import check_handshake_guards, check_isolation, check_region_bounds
+from .hazard import (check_handshake_guards, check_isolation,
+                     check_kv_streams, check_region_bounds)
 from .lint import lint_program, lint_pu_program
 from .report import Code, Diagnostic, Severity, VerificationError, VerifyReport
 from .sync import check_token_balance, check_token_flow, check_wchunk_interlock
@@ -34,6 +35,7 @@ __all__ = [
     "VerifyReport",
     "check_handshake_guards",
     "check_isolation",
+    "check_kv_streams",
     "check_region_bounds",
     "check_token_balance",
     "check_token_flow",
@@ -72,6 +74,7 @@ def verify_programs(
     if hazards and mem is not None:
         check_region_bounds(programs, mem, member=member, report=rep)
         check_handshake_guards(programs, mem, member=member, report=rep)
+        check_kv_streams(programs, mem, member=member, report=rep)
     return rep
 
 

@@ -26,7 +26,8 @@ from ..deploy import Strategy, Workload, compile_deployment
 from . import verify_deployment
 from .report import Severity
 
-MODELS = ("tiny_cnn", "resnet50", "vit", "encoder", "decoder", "multi")
+MODELS = ("tiny_cnn", "resnet50", "vit", "encoder", "decoder", "packed",
+          "multi")
 
 
 def _target(name: str, args: argparse.Namespace):
@@ -53,6 +54,14 @@ def _target(name: str, args: argparse.Namespace):
         g = zoo.transformer_decoder(seq_len=seq, depth=depth,
                                     decode_steps=steps)
         cfg, rounds = (2, 2), None  # decode window defaults per member
+    elif name == "packed":
+        # slot-packed decode: three sessions at different cache depths in
+        # one member — exercises the per-slot AddrLen streams and the
+        # check_kv_streams hazard tier
+        steps = args.decode_steps if args.decode_steps is not None else 8
+        g = zoo.transformer_decoder(slots=(2 * seq, seq, seq // 2),
+                                    depth=depth, decode_steps=steps)
+        cfg, rounds = (2, 2), None
     elif name == "multi":
         strat = Strategy.tenants([
             (Workload(zoo.tiny_cnn(), "cnn"), 1, 1),
@@ -67,7 +76,7 @@ def _target(name: str, args: argparse.Namespace):
     if args.rounds is not None:
         rounds = args.rounds
     label = f"{name}({cfg[0]},{cfg[1]})"
-    return g, Strategy.of(cfg), rounds, label
+    return g, Strategy.single(*cfg), rounds, label
 
 
 def main(argv: "list[str] | None" = None) -> int:

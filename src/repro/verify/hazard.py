@@ -281,6 +281,138 @@ def check_handshake_guards(programs: list[PUProgram], mem: MemoryPlan, *,
     return rep
 
 
+def check_kv_streams(programs: list[PUProgram], mem: MemoryPlan, *,
+                     member: str = "",
+                     report: Optional[VerifyReport] = None) -> VerifyReport:
+    """Per-slot K/V stream consistency: every cache region's length-advancing
+    reader and append cursor describe the *same* slot geometry.
+
+    With slot-packed decode (several sessions at different cache depths in
+    one member) each cache region carries its own AddrLen read stream and
+    its own AddrCyc append stream. The bounds/ping-pong checks see each
+    stream in isolation; this check cross-correlates the two per region, so
+    a cross-slot mixup — one slot's append cursor pointed at another slot's
+    region, or a read prefix compiled for a different slot's depth — is
+    caught even when every individual extent stays in bounds:
+
+    * the read stream must start at the region base, advance in whole rows
+      (``len_base`` a multiple of ``loffs``), and imply a non-negative
+      prefix that stays inside the region across all ``nc`` rounds;
+    * exactly one append stream must target the region, writing one row
+      (``length == aoffs == loffs``) starting right after the read prefix
+      (``ba == base + base_rows*row``) over the same round count.
+    """
+    rep = report if report is not None else VerifyReport(label=member)
+
+    kv_plans = {p.tid: p for p in mem.tensors.values() if p.kind == "kv"}
+    if not kv_plans:
+        return rep
+    reads: dict[int, list] = {}
+    appends: dict[int, list] = {}
+    for pu in programs:
+        for group, prog in ((Group.LD, pu.ld), (Group.CP, pu.cp),
+                            (Group.ST, pu.st)):
+            for idx, inst in enumerate(prog.instructions):
+                if not isinstance(inst, DataMove):
+                    continue
+                cyc = _succ_cycle(prog, idx)
+                plan = _find_plan(mem, inst.cur_ba)
+                if plan is None or plan.kind != "kv":
+                    continue
+                loc = (pu.pid, group.value, idx, inst, cyc)
+                if isinstance(cyc, AddrLen):
+                    reads.setdefault(plan.tid, []).append(loc)
+                elif group is Group.ST:
+                    appends.setdefault(plan.tid, []).append(loc)
+
+    for tid, plan in sorted(kv_plans.items()):
+        rs = reads.get(tid, [])
+        ws = appends.get(tid, [])
+        if not rs and not ws:
+            continue  # untouched region (dead tensor) — nothing to correlate
+        if not ws:
+            rep.add(Code.HAZ_KV_STREAM,
+                    f"kv tensor {tid}: length-advancing read stream has no "
+                    "append stream — the prefix never grows past round 0",
+                    member=member)
+            continue
+        if not rs:
+            rep.add(Code.HAZ_KV_STREAM,
+                    f"kv tensor {tid}: append stream has no length-advancing "
+                    "reader — appended rows are never consumed",
+                    severity=Severity.WARNING, member=member)
+        if len(ws) > 1:
+            locs = ", ".join(f"pu{p}.{g}[{i}]" for p, g, i, _, _ in ws)
+            rep.add(Code.HAZ_KV_STREAM,
+                    f"kv tensor {tid}: {len(ws)} append streams target one "
+                    f"slot region ({locs}) — cross-slot append mixup",
+                    member=member)
+
+        geom = None  # (row, base_rows, nc) implied by the read side
+        for pid, grp, idx, dm, al in rs:
+            row, len0, nc = al.loffs, al.len_base, al.nc
+            if row <= 0 or len0 % row or len0 < row:
+                rep.add(Code.HAZ_KV_STREAM,
+                        f"kv tensor {tid}: read stream advances by LOFFS="
+                        f"{row} from LEN_BASE={len0} — not a whole-row "
+                        "prefix", member=member, pid=pid, group=grp,
+                        index=idx)
+                continue
+            base_rows = len0 // row - 1
+            if dm.cur_ba != plan.base_addr:
+                rep.add(Code.HAZ_KV_STREAM,
+                        f"kv tensor {tid}: prefix read starts at "
+                        f"0x{dm.cur_ba:x}, not the region base "
+                        f"0x{plan.base_addr:x}", member=member, pid=pid,
+                        group=grp, index=idx)
+            if len0 + nc * row > plan.region_bytes:
+                rep.add(Code.HAZ_KV_STREAM,
+                        f"kv tensor {tid}: read prefix grows to "
+                        f"{len0 + nc * row} bytes, past the "
+                        f"{plan.region_bytes}-byte region — depth belongs "
+                        "to a deeper slot", member=member, pid=pid,
+                        group=grp, index=idx)
+            if geom is None:
+                geom = (row, base_rows, nc)
+            elif geom != (row, base_rows, nc):
+                rep.add(Code.HAZ_KV_STREAM,
+                        f"kv tensor {tid}: read streams disagree on slot "
+                        f"geometry ({geom} vs {(row, base_rows, nc)})",
+                        member=member, pid=pid, group=grp, index=idx)
+
+        for pid, grp, idx, dm, ac in ws:
+            if not isinstance(ac, AddrCyc):
+                rep.add(Code.HAZ_KV_STREAM,
+                        f"kv tensor {tid}: append write carries no AddrCyc "
+                        "cursor — every round overwrites one row",
+                        member=member, pid=pid, group=grp, index=idx)
+                continue
+            if geom is None:
+                continue  # read side already diagnosed (or absent)
+            row, base_rows, nc = geom
+            want_ba = plan.base_addr + base_rows * row
+            if dm.length != row or ac.aoffs != row:
+                rep.add(Code.HAZ_KV_STREAM,
+                        f"kv tensor {tid}: append writes {dm.length} bytes "
+                        f"with stride {ac.aoffs}, but the read side's row "
+                        f"is {row} bytes", member=member, pid=pid,
+                        group=grp, index=idx)
+            if ac.ba != want_ba or dm.cur_ba != want_ba:
+                rep.add(Code.HAZ_KV_STREAM,
+                        f"kv tensor {tid}: append cursor starts at "
+                        f"0x{ac.ba:x}, but the read prefix ends at "
+                        f"0x{want_ba:x} ({base_rows} base rows) — append "
+                        "and read disagree on the slot's depth",
+                        member=member, pid=pid, group=grp, index=idx)
+            if ac.nc != nc:
+                rep.add(Code.HAZ_KV_STREAM,
+                        f"kv tensor {tid}: append cursor covers "
+                        f"{ac.nc + 1} round(s) but the read stream "
+                        f"advances over {nc + 1}", member=member, pid=pid,
+                        group=grp, index=idx)
+    return rep
+
+
 def check_isolation(members: list[tuple[str, list[PUProgram],
                                         Optional[MemoryPlan]]], *,
                     report: Optional[VerifyReport] = None) -> VerifyReport:

@@ -43,6 +43,7 @@ class Code(enum.Enum):
     HAZ_BID_MISMATCH = "haz-bid-mismatch"        # guard BID range != plan BIDs
     HAZ_UNGUARDED_WRITE = "haz-unguarded-write"  # store without WAIT_ACK guard
     HAZ_UNGUARDED_READ = "haz-unguarded-read"    # load without WAIT_REQ guard
+    HAZ_KV_STREAM = "haz-kv-stream"              # per-slot K/V stream mismatch
     # -- ISA lint ----------------------------------------------------------
     LINT_FIELD_OVERFLOW = "lint-field-overflow"  # value exceeds field width
     LINT_MISALIGNED = "lint-misaligned"          # address not beat-aligned

@@ -1,0 +1,310 @@
+"""Online serving control plane tests: slot-packed decode conformance, the
+per-slot K/V stream verifier check, the Session/RunReport API surface, the
+deprecation shims, and the Server scheduling loop (admission order,
+continuous-batching slot reuse, SLO eviction, and incremental mid-service
+re-placement equal to a from-scratch exploration)."""
+import copy
+
+import pytest
+
+from repro.compiler import zoo
+from repro.core.isa import AddrCyc, DataMove
+from repro.deploy import (
+    SLO,
+    RunReport,
+    Session,
+    Strategy,
+    System,
+    compile_deployment,
+)
+from repro.dse import explore_multi
+from repro.dse.explorer import _normalize_engine
+from repro.serve import Request, Server
+from repro.verify import check_kv_streams, verify_programs
+
+
+@pytest.fixture(scope="module")
+def classic_dep():
+    g = zoo.transformer_decoder(seq_len=64, decode_steps=8, depth=1)
+    return compile_deployment(g, Strategy.single(2, 2))
+
+
+@pytest.fixture(scope="module")
+def classic_report(classic_dep):
+    return System().load(classic_dep).run()
+
+
+@pytest.fixture(scope="module")
+def packed_dep():
+    g = zoo.transformer_decoder(slots=(64, 32), decode_steps=8, depth=1)
+    return compile_deployment(g, Strategy.single(2, 2))
+
+
+@pytest.fixture(scope="module")
+def packed_report(packed_dep):
+    return System().load(packed_dep).run()
+
+
+class TestPackedDecode:
+    def test_one_slot_packed_is_bit_identical_to_classic(self, classic_report):
+        g = zoo.transformer_decoder(slots=(64,), decode_steps=8, depth=1)
+        dep = compile_deployment(g, Strategy.single(2, 2))
+        rep = System().load(dep).run()
+        assert rep.aggregate_fps() == pytest.approx(
+            classic_report.aggregate_fps(), rel=1e-12)
+
+    def test_two_slots_within_5pct_of_analytic(self, packed_dep,
+                                               packed_report):
+        sim_fps = packed_report.aggregate_fps()
+        pred = packed_dep.predicted_throughput
+        assert not packed_report.deadlocked
+        assert abs(sim_fps - pred) / pred < 0.05
+
+    def test_four_slots_within_5pct_of_analytic(self):
+        g = zoo.transformer_decoder(slots=(128, 96, 64, 32), decode_steps=8,
+                                    depth=1)
+        dep = compile_deployment(g, Strategy.single(2, 2))
+        rep = System().load(dep).run()
+        pred = dep.predicted_throughput
+        assert not rep.deadlocked
+        assert abs(rep.aggregate_fps() - pred) / pred < 0.05
+
+    def test_slot_token_accounting(self, packed_report):
+        (m,) = packed_report.members
+        assert m.n_slots == 2
+        assert m.tokens == 2 * m.rounds
+        assert packed_report.aggregate_token_rate() == pytest.approx(
+            2 * packed_report.aggregate_fps(), rel=1e-9)
+
+    def test_packed_deployment_is_verifier_clean(self, packed_dep):
+        for m in packed_dep.members:
+            rep = verify_programs(m.compiled.programs, mem=m.compiled.mem,
+                                  member=m.workload.label)
+            assert rep.ok, [str(d) for d in rep.errors]
+
+
+def _kv_appends(programs, mem):
+    """(dm, ac, plan) for every ST append into a K/V cache region."""
+    plans = [p for p in mem.tensors.values() if p.kind == "kv"]
+    out = []
+    for pu in programs:
+        insts = pu.st.instructions
+        for idx, dm in enumerate(insts):
+            if not isinstance(dm, DataMove) or idx + 1 >= len(insts):
+                continue
+            ac = insts[idx + 1]
+            if not isinstance(ac, AddrCyc):
+                continue
+            for p in plans:
+                if p.base_addr <= dm.cur_ba < p.base_addr + p.region_bytes:
+                    out.append((dm, ac, p))
+                    break
+    return out
+
+
+class TestKVStreamCheck:
+    def test_clean_on_packed_deployment(self, packed_dep):
+        for m in packed_dep.members:
+            rep = check_kv_streams(m.compiled.programs, m.compiled.mem,
+                                   member=m.workload.label)
+            assert rep.ok and not rep.diagnostics
+
+    def test_detects_cross_slot_append_mixup(self, packed_dep):
+        (m,) = packed_dep.members
+        programs = copy.deepcopy(m.compiled.programs)
+        mem = m.compiled.mem
+        appends = _kv_appends(programs, mem)
+        # Retarget one slot's append cursor at a *different* slot's region —
+        # every individual extent stays in bounds, so only the stream
+        # cross-correlation can see it.
+        victim = donor = None
+        for dm, ac, p in appends:
+            if donor is None:
+                donor = (dm, ac, p)
+            elif p.tid != donor[2].tid:
+                victim = (dm, ac, p)
+                break
+        assert victim is not None, "need appends into two distinct slots"
+        victim[0].cur_ba = donor[0].cur_ba
+        victim[1].ba = donor[1].ba
+        rep = check_kv_streams(programs, mem)
+        msgs = " | ".join(d.message for d in rep.errors)
+        assert not rep.ok
+        assert "cross-slot append mixup" in msgs
+        assert "no append stream" in msgs
+
+
+class TestSessionAndRunReport:
+    def test_load_returns_session_with_history(self, classic_dep):
+        system = System()
+        session = system.load(classic_dep)
+        assert isinstance(session, Session)
+        assert session.deployment is classic_dep
+        assert [r.name for r in session.swaps] == [classic_dep.name]
+        # switch returns the same live handle and records the swap
+        assert system.switch(classic_dep) is session
+        assert len(session.swaps) == 2
+        assert session.swaps[-1].tenants == session.tenants
+
+    def test_run_returns_forwarding_report(self, classic_report):
+        rep = classic_report
+        assert isinstance(rep, RunReport)
+        assert rep.source == "run" and rep.sim is not None
+        # unknown attributes forward to the backing SimResult
+        assert rep.members is rep.sim.members
+        assert rep.aggregate_fps() == rep.sim.aggregate_fps()
+        assert set(rep.tenants) == set(rep.fps_by_workload())
+
+    def test_percentiles_ordered(self, classic_report):
+        rep = classic_report
+        assert 0 < rep.latency_p50 <= rep.latency_p95 <= rep.latency_p99
+        (t,) = rep.tenants.values()
+        assert t.latency_p95 == rep.latency_p95
+        assert rep.total_tokens == t.tokens > 0
+
+
+class TestDeprecations:
+    def test_bare_tuple_strategy_warns(self):
+        with pytest.warns(DeprecationWarning, match="tuple-only"):
+            s = Strategy.of((2, 2))
+        assert s.configs == ((2, 2),)
+
+    def test_tuple_list_strategy_warns(self):
+        with pytest.warns(DeprecationWarning, match="tuple-only"):
+            s = Strategy.of([(2, 2), (3, 3)])
+        assert s.configs == ((2, 2), (3, 3))
+
+    def test_named_constructors_do_not_warn(self, recwarn):
+        Strategy.single(2, 2)
+        Strategy.multi([(2, 2), (3, 3)])
+        deps = [w for w in recwarn.list
+                if issubclass(w.category, DeprecationWarning)]
+        assert not deps
+
+    def test_fast_engine_warns_and_normalizes(self):
+        with pytest.warns(DeprecationWarning, match='engine="fast"'):
+            assert _normalize_engine("fast") == "batched"
+        assert _normalize_engine("batched") == "batched"
+        with pytest.raises(ValueError):
+            _normalize_engine("warp")
+
+
+class TestServer:
+    def test_request_validation(self):
+        srv = Server()
+        with pytest.raises(KeyError):
+            srv.submit(Request("ghost", prompt_tokens=8, max_new_tokens=4))
+        srv.join("a", depth=1, window=4)
+        with pytest.raises(ValueError):
+            srv.join("a")
+        with pytest.raises(ValueError):
+            srv.join("b", window=0)
+        srv.submit(Request("a", prompt_tokens=8, max_new_tokens=4))
+        with pytest.raises(ValueError):
+            srv.leave("a")  # still has queued work
+        srv.leave("a", force=True)
+        assert srv.requests[0].evicted and not srv.requests[0].completed
+
+    def test_admission_is_fifo_in_tenant_order(self):
+        srv = Server()
+        srv.join("a", depth=1, max_slots=1, window=4)
+        srv.join("b", depth=1, max_slots=1, window=4)
+        srv.submit(Request("b", prompt_tokens=32, max_new_tokens=8))   # b-1
+        srv.submit(Request("a", prompt_tokens=32, max_new_tokens=4))   # a-2
+        srv.submit(Request("a", prompt_tokens=16, max_new_tokens=4))   # a-3
+        srv.drain()
+        admits = [e.detail.split()[0] for e in srv.events
+                  if e.kind == "admit"]
+        # tenants admit in sorted name order, FIFO within a tenant; a-3
+        # waits for a-2's slot and reuses it at the window boundary
+        assert admits == ["a-2", "b-1", "a-3"]
+        assert all(r.completed for r in srv.requests)
+
+    def test_slot_reuse_matches_separate_runs(self):
+        srv = Server()
+        srv.join("t", depth=1, max_slots=2, window=4)
+        reqs = [Request("t", prompt_tokens=48, max_new_tokens=8),
+                Request("t", prompt_tokens=24, max_new_tokens=4),
+                Request("t", prompt_tokens=32, max_new_tokens=4)]
+        for r in reqs:
+            srv.submit(r)
+        rep = srv.drain()
+        assert all(r.completed for r in reqs)
+        assert all(r.generated == r.max_new_tokens for r in reqs)
+        # window 1 packs r1+r2, r2 retires at the boundary, window 2 packs
+        # r1 (deeper now) + r3 in the freed slot
+        assert srv.windows == 2
+        # token accounting equals N separate single-session decode runs
+        a, b = srv.placement.config_for("t")
+        separate = 0
+        for r in reqs:
+            g = zoo.transformer_decoder(seq_len=r.prompt_tokens,
+                                        decode_steps=r.max_new_tokens,
+                                        depth=1)
+            dep = compile_deployment(g, Strategy.single(a, b))
+            separate += System().load(dep).run().total_tokens
+        assert rep.tenants["t"].tokens == separate == 16
+
+    def test_slo_violation_replans_then_evicts(self):
+        srv = Server(slo_patience=2)
+        srv.join("lo", depth=1, max_slots=1, window=4,
+                 slo=SLO(min_tokens_per_s=1e12))  # unattainable rate floor
+        req = srv.submit(Request("lo", prompt_tokens=32, max_new_tokens=32))
+        rep = srv.drain()
+        kinds = [e.kind for e in srv.events]
+        # two violating windows -> one remedial replan; two more -> shed
+        assert any(e.kind == "replan" and e.detail == "slo remediation"
+                   for e in srv.events)
+        assert "evict" in kinds
+        assert req.evicted and not req.completed
+        assert 0 < req.generated < req.max_new_tokens
+        assert rep.tenants["lo"].slo_attainment == 0.0
+
+    def test_two_tenants_join_leave_mid_service(self):
+        srv = Server()
+        srv.join("alice", depth=1, max_slots=2, window=8)
+        srv.join("bob", depth=1, max_slots=2, window=8)
+        srv.submit(Request("alice", prompt_tokens=64, max_new_tokens=12))
+        srv.submit(Request("alice", prompt_tokens=32, max_new_tokens=20))
+        srv.submit(Request("bob", prompt_tokens=48, max_new_tokens=10))
+        # arrives mid-service, admitted into bob's second slot on the fly
+        srv.submit(Request("bob", prompt_tokens=40, max_new_tokens=8,
+                           arrival_s=1e-4))
+        rep = srv.drain()
+        assert all(r.completed for r in srv.requests)
+        assert rep.total_tokens == 50
+        assert rep.tenants["alice"].latency_p95 > 0
+        # bob leaves; alice keeps serving alone (single-tenant placement)
+        srv.leave("bob")
+        srv.submit(Request("alice", prompt_tokens=16, max_new_tokens=6,
+                           arrival_s=srv.now))
+        rep2 = srv.drain()
+        assert "bob" not in rep2.tenants
+        assert all(r.completed for r in srv.requests)
+
+    def test_incremental_replacement_equals_from_scratch(self):
+        srv = Server()
+        srv.join("a", depth=1, max_slots=1, window=4)
+        srv.join("b", depth=1, max_slots=1, window=4)
+        srv.submit(Request("a", prompt_tokens=32, max_new_tokens=16))
+        srv.submit(Request("b", prompt_tokens=32, max_new_tokens=16))
+        assert srv.step()  # places {a, b}
+        first = srv.placement
+        assert srv._prev_multi is not None
+        # c joins mid-service -> membership change -> incremental replan
+        srv.join("c", depth=1, max_slots=1, window=4)
+        srv.submit(Request("c", prompt_tokens=24, max_new_tokens=8,
+                           arrival_s=srv.now))
+        assert srv.step()
+        second = srv.placement
+        assert second is not first
+        assert [e.kind for e in srv.events].count("replan") == 2
+        # the online (prev=...) placement is byte-equal to exploring the
+        # new tenant set from scratch
+        ws = [srv._tenants[n].workload for n in ("a", "b", "c")]
+        scratch = explore_multi(ws, n_pu1x=srv.n_pu1x,
+                                n_pu2x=srv.n_pu2x).balanced
+        assert second.point == scratch
+        assert second.configs == scratch.configs
+        srv.drain()
+        assert all(r.completed for r in srv.requests)
