@@ -90,6 +90,14 @@ class ICU:
 
         self.stats: dict[Group, GroupStats] = {g: GroupStats() for g in Group}
         self.program: Optional[PUProgram] = None
+        self.member = ""  # owning deployment member label (set by start)
+        # Injected fault state (repro.faults): when set, every decoder of
+        # this PU parks forever once the clock reaches ``hang_at`` — the
+        # model of a hardware PU that silently stops issuing instructions.
+        self.hang_at: Optional[float] = None
+        # pc of the instruction each decoder group is currently executing
+        # (fault reports locate a stuck decoder down to the instruction).
+        self.cur_index: dict[Group, int] = {}
 
     # -- token delivery (installed into ISUNetwork by the simulator) --------
     def deliver(self, token: Token) -> None:
@@ -105,13 +113,16 @@ class ICU:
         self.ack_lutram[key] = self.ack_lutram.get(key, 0) + 1
 
     # -- program start -------------------------------------------------------
-    def start(self, program: PUProgram) -> None:
+    def start(self, program: PUProgram, member: str = "") -> None:
         self.program = program.clone()
         self.program.validate()
+        self.member = member
         pid = self.spec.pid
-        self.kernel.spawn(self._decoder(Group.LD, self.program.ld), name=f"pu{pid}.LD")
-        self.kernel.spawn(self._decoder(Group.CP, self.program.cp), name=f"pu{pid}.CP")
-        self.kernel.spawn(self._decoder(Group.ST, self.program.st), name=f"pu{pid}.ST")
+        for group, prog in ((Group.LD, self.program.ld),
+                            (Group.CP, self.program.cp),
+                            (Group.ST, self.program.st)):
+            self.kernel.spawn(self._decoder(group, prog),
+                              name=f"pu{pid}.{group.name}", member=member)
 
     # -- decoder FSM ----------------------------------------------------------
     def _decoder(self, group: Group, prog: Program):
@@ -125,7 +136,20 @@ class ICU:
 
         at_round_start = True
         while True:
+            if self.hang_at is not None and self.kernel.now >= self.hang_at:
+                # Injected PU hang: the decoder stops issuing instructions
+                # mid-round, silently — exactly what the watchdog must turn
+                # into a structured FaultReport. The key is never notified
+                # and the predicate never true, so the process parks forever.
+                self.cur_index[group] = pc
+                yield WaitCond(
+                    ("fault", "hang", self.spec.pid, group.name),
+                    pred=lambda: False,
+                    desc=f"injected PU hang (pu{self.spec.pid} issues no "
+                         "further instructions)",
+                )
             inst = insts[pc]
+            self.cur_index[group] = pc
             if at_round_start:
                 st.round_start_times.append(self.kernel.now)
                 at_round_start = False
@@ -151,6 +175,7 @@ class ICU:
                             self._async_adm(inst.length, inst.channel,
                                             kind="weights", addr=inst.cur_ba),
                             name=f"pu{self.spec.pid}.wadm",
+                            member=self.member,
                         )
                     else:  # RES_ADD_* : residual shortcut stream
                         self.res_issued += 1
@@ -158,6 +183,7 @@ class ICU:
                             self._async_adm(inst.length, inst.channel,
                                             kind="res", addr=inst.cur_ba),
                             name=f"pu{self.spec.pid}.radm",
+                            member=self.member,
                         )
                 elif group is Group.LD:
                     # Fill one input activation ping-pong slot, *streaming*:

@@ -72,6 +72,12 @@ class ISUNetwork:
         self.pus = {p.pid: p for p in pus}
         self.deliver: Optional[Callable[[int, Token], None]] = None
         self.tokens_sent = 0
+        self.tokens_dropped = 0
+        # Injected fault hook (repro.faults): maps (token, latency) to a
+        # possibly corrupted token and latency, or to (None, _) to drop the
+        # token in the fabric. Installed per reset; None on a healthy fabric.
+        self.fault_hook: Optional[
+            Callable[[Token, float], tuple[Optional[Token], float]]] = None
         self._inflight: dict[tuple[int, int], int] = {}  # crude contention model
 
     def send(self, token: Token) -> None:
@@ -80,6 +86,12 @@ class ISUNetwork:
         src = self.pus[token.src_pid]
         dst = self.pus[token.dst_pid]
         base = token_latency_cycles(src, dst)
+        if self.fault_hook is not None:
+            faulted, base = self.fault_hook(token, base)
+            if faulted is None:  # dropped in the fabric
+                self.tokens_dropped += 1
+                return
+            token = faulted
         # one-transfer round-robin: a token queued behind k in-flight tokens
         # on the same directed link waits k extra cycles.
         link = (token.src_pid, token.dst_pid)

@@ -37,13 +37,18 @@ class PipelineMember:
     remain attributable to their tenant. ``slots`` names the decode
     sessions packed into this member (empty for unpacked members): one
     program round then advances *every* packed session by one token, so
-    round accounting scales to token accounting by the slot count."""
+    round accounting scales to token accounting by the slot count.
+    ``pids`` lists every PU the member occupies (not just entry/exit, which
+    need not bracket the set under kind-interleaved stage orders) — fault
+    diagnostics attribute a stuck PU to its owning member through it; empty
+    means unknown (legacy callers), which only degrades attribution."""
 
     first_pid: int
     last_pid: int
     label: str = ""
     workload: str = ""
     slots: tuple[str, ...] = ()
+    pids: tuple[int, ...] = ()
 
 
 def _steady_fps(round_ends: list[float], warmup: int, sys_clk_hz: float,
@@ -137,6 +142,16 @@ class SimResult:
     round_latencies_cycles: list[float] = field(default_factory=list)
     round_end_cycles: list[float] = field(default_factory=list)
     members: list[MemberSimResult] = field(default_factory=list)
+    # Watchdog detections (repro.faults.FaultReport); a faulted run is not
+    # "deadlocked" — the fault IS the diagnosis, and the run was halted by
+    # detection rather than by draining the heap.
+    faults: list = field(default_factory=list)
+    # BlockedProc entries captured when the run deadlocked or faulted.
+    blocked: list = field(default_factory=list)
+
+    @property
+    def faulted(self) -> bool:
+        return bool(self.faults)
 
     # -- derived metrics -----------------------------------------------------
     @property
@@ -201,6 +216,8 @@ class MultiPUSimulator:
     def __init__(self, pus: Optional[list[PUSpec]] = None, trace: bool = False) -> None:
         self.pus = pus if pus is not None else make_u50_system()
         self._trace = trace
+        self.fault_schedule = None  # repro.faults.FaultSchedule, or None
+        self.injector = None        # per-run FaultInjector when armed
         self.reset()
 
     def reset(self) -> None:
@@ -208,7 +225,13 @@ class MultiPUSimulator:
 
         This is the simulator analogue of the paper's headline feature: the
         PU array (the FPGA bitstream) never changes; switching deployment
-        strategies only swaps the instruction programs loaded next."""
+        strategies only swaps the instruction programs loaded next.
+
+        All injected-fault state (hang gates, fabric hooks, stall
+        processes) lives on the per-run objects rebuilt here, so reset
+        always starts clean; an attached fault *schedule* is re-armed onto
+        the fresh state (the schedule models broken hardware, which does
+        not heal on a program swap) until :meth:`clear_faults`."""
         self.kernel = Kernel()
         self.kernel.trace_enabled = self._trace
         self.isu = ISUNetwork(self.kernel, self.pus)
@@ -219,6 +242,28 @@ class MultiPUSimulator:
             p.pid: ICU(self.kernel, p, self.isu, self.hbm_channels) for p in self.pus
         }
         self.isu.deliver = lambda dst, tok: self.icus[dst].deliver(tok)
+        self._arm()
+
+    # -- fault injection (repro.faults) -------------------------------------
+    def inject(self, schedule) -> None:
+        """Attach a :class:`repro.faults.FaultSchedule`; it arms onto fresh
+        run state now and re-arms on every reset until cleared."""
+        self.fault_schedule = schedule
+        self.reset()
+
+    def clear_faults(self) -> None:
+        """Detach the fault schedule and rebuild clean run state."""
+        self.fault_schedule = None
+        self.reset()
+
+    def _arm(self) -> None:
+        if self.fault_schedule:
+            from ..faults.inject import FaultInjector
+
+            self.injector = FaultInjector(self, self.fault_schedule)
+            self.injector.install()
+        else:
+            self.injector = None
 
     @property
     def peak_tops(self) -> float:
@@ -232,25 +277,42 @@ class MultiPUSimulator:
         first_pid: Optional[int] = None,
         last_pid: Optional[int] = None,
         members: Optional[list[PipelineMember]] = None,
+        watchdog=None,
     ) -> SimResult:
         """Load + start all programs, run to completion (or ``until_cycles``).
 
         ``members`` lists the entry/exit PUs of each concurrent member
         pipeline for latency accounting. Without it, the programs form one
         pipeline whose entry/exit default to ``first_pid``/``last_pid`` (or
-        the first/last program in the list)."""
+        the first/last program in the list).
+
+        ``watchdog`` (a :class:`repro.faults.Watchdog`) spawns the fault
+        monitor: silent hangs halt the run and come back as structured
+        ``SimResult.faults`` instead of an unbounded simulation."""
         if not programs:
             raise ValueError("no programs")
         if members is not None and (first_pid is not None or last_pid is not None):
             raise ValueError("pass either members or first_pid/last_pid, not both")
-        for prog in programs:
-            self.icus[prog.pid].start(prog)
-        end = self.kernel.run(until=until_cycles)
-
         if members is None:
             first = first_pid if first_pid is not None else programs[0].pid
             last = last_pid if last_pid is not None else programs[-1].pid
-            members = [PipelineMember(first_pid=first, last_pid=last)]
+            members = [PipelineMember(first_pid=first, last_pid=last,
+                                      pids=tuple(p.pid for p in programs))]
+        # pid -> owning member label, threaded onto every spawned process so
+        # deadlock/fault diagnostics stay attributable to their tenant.
+        label_of: dict[int, str] = {}
+        for m in members:
+            for pid in m.pids:
+                label_of[pid] = m.workload or m.label
+        for prog in programs:
+            self.icus[prog.pid].start(prog, member=label_of.get(prog.pid, ""))
+        faults: list = []
+        if watchdog is not None:
+            from ..faults.watchdog import spawn_monitor
+
+            spawn_monitor(self, watchdog, members, faults)
+        end = self.kernel.run(until=until_cycles)
+
         stats = {p.pid: self.icus[p.pid].stats for p in self.pus}
         clk = self.pus[0].sys_clk_hz if self.pus else SYS_CLK_HZ
 
@@ -283,7 +345,9 @@ class MultiPUSimulator:
         merged_lats = [t[1] for t in tagged if t[1] is not None]
 
         # Deadlock: processes still pending but no events left before horizon.
-        dead = bool(self.kernel.deadlocked()) and end < until_cycles
+        # A watchdog-detected fault is its own diagnosis, not a deadlock.
+        dead = (bool(self.kernel.deadlocked()) and end < until_cycles
+                and not faults)
 
         return SimResult(
             sys_clk_hz=clk,
@@ -295,6 +359,8 @@ class MultiPUSimulator:
             round_latencies_cycles=merged_lats,
             round_end_cycles=merged_ends,
             members=member_results,
+            faults=faults,
+            blocked=(self.kernel.blocked_procs() if (dead or faults) else []),
         )
 
 

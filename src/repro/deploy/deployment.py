@@ -23,7 +23,7 @@ loadable into :class:`repro.deploy.System`.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Iterable, Optional
 
 from ..compiler.compile import CompiledModel, compile_model
 from ..compiler.graph import Graph
@@ -82,6 +82,7 @@ class DeployedMember:
             label=f"m{self.index}({a},{b})",
             workload=self.workload.label,
             slots=self.workload.slots,
+            pids=self.pids,
         )
 
 
@@ -203,6 +204,8 @@ def compile_deployment(
     n_io: int = 4,
     n_channels: int = N_HBM_CHANNELS,
     verify: bool = True,
+    available: Optional[Iterable[int]] = None,
+    channels: Optional[Iterable[int]] = None,
 ) -> Deployment:
     """Compile any schedule-like ``strategy`` (see :meth:`Strategy.of`) into
     an executable deployment.
@@ -227,7 +230,14 @@ def compile_deployment(
     and raises :class:`~repro.verify.VerificationError` (carrying the
     structured :class:`~repro.verify.VerifyReport`) on any error-severity
     diagnostic. Pass ``verify=False`` to skip (e.g. when intentionally
-    compiling a defective program for the mutation harness)."""
+    compiling a defective program for the mutation harness).
+
+    ``available``/``channels`` are the degraded-array masks (fault
+    tolerance): pids / HBM channel ids still healthy. Members are placed
+    and compiled against the healthy subset only, but the deployment still
+    records the *full* ``pus`` array — the machine (the bitstream) is
+    unchanged, quarantined units merely receive no programs — so it stays
+    loadable into the same :class:`~repro.deploy.System`."""
     strategy = Strategy.of(strategy).with_workload(g)
     unbound = [i for i, m in enumerate(strategy.members) if m.workload is None]
     if unbound:
@@ -236,7 +246,21 @@ def compile_deployment(
             "and no graph was given to broadcast"
         )
     pus = pus if pus is not None else make_u50_system()
-    placement = partition_resources(strategy, pus, n_channels=n_channels)
+    pool_pus = pus
+    if available is not None:
+        avail = set(available)
+        pool_pus = [p for p in pus if p.pid in avail]
+        if not pool_pus:
+            raise ValueError("no available PUs: every pid is masked out")
+        for kind in ("PU1x", "PU2x"):
+            need = strategy.total_a if kind == "PU1x" else strategy.total_b
+            if need > 0 and not any(p.kind == kind for p in pool_pus):
+                raise ValueError(
+                    f"strategy {strategy} needs {kind} units but every "
+                    f"{kind} pid is quarantined")
+    chan_list = sorted(channels) if channels is not None else None
+    placement = partition_resources(strategy, pool_pus, n_channels=n_channels,
+                                    channels=chan_list)
 
     members: list[DeployedMember] = []
     for member, res in zip(strategy.members, placement):
@@ -247,15 +271,16 @@ def compile_deployment(
             member_rounds = rounds
         else:
             member_rounds = workload.graph.decode_steps or DEFAULT_ROUNDS
+        masked = strategy.batch > 1 or available is not None or channels is not None
         cm = compile_model(
             workload.graph,
             member.a,
             member.b,
-            pus=pus,
+            pus=pool_pus,
             rounds=member_rounds,
             n_io=n_io,
-            pid_offset=res.pid_offset if strategy.batch > 1 else None,
-            channel_pool=list(res.channel_pool) if strategy.batch > 1 else None,
+            pid_offset=res.pid_offset if masked else None,
+            channel_pool=list(res.channel_pool) if masked else None,
         )
         # Force instruction generation here: compilation is lazy (the DSE
         # evaluates thousands of configs without ever emitting instructions),

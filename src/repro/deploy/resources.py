@@ -24,6 +24,7 @@ instead of erroring deep inside per-member compilation.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional, Sequence
 
 from ..core.pu import N_HBM_CHANNELS, PUSpec
 from .strategy import Member, Strategy
@@ -70,6 +71,8 @@ def check_fits(strategy: Strategy, pus: list[PUSpec],
                n_channels: int = N_HBM_CHANNELS) -> None:
     """Validate that all member slices fit the machine.
 
+    ``pus`` is the *available* PU list — a degraded array simply passes its
+    healthy subset — and ``n_channels`` the available channel count.
     Raises a single ValueError enumerating each member's requested PUs and
     minimum channels against what the machine offers, so an overcommitted
     multi-tenant strategy reports every tenant's demand at once."""
@@ -125,16 +128,23 @@ def partition_resources(
     strategy: Strategy,
     pus: list[PUSpec],
     n_channels: int = N_HBM_CHANNELS,
+    channels: "Optional[Sequence[int]]" = None,
 ) -> list[MemberResources]:
-    """Assign each member pipeline disjoint PUs (as kind offsets) and a
-    disjoint HBM channel range."""
-    check_fits(strategy, pus, n_channels=n_channels)
-    shares = _channel_shares(_member_weights(strategy), n_channels)
+    """Assign each member pipeline disjoint PUs (as kind offsets into the
+    given — possibly degraded — PU list) and a disjoint HBM channel range.
+
+    ``channels`` restricts the split to an explicit list of available
+    channel ids (the serving loop passes the healthy channels of a
+    quarantined array); members then get consecutive disjoint slices of
+    that list instead of of ``range(n_channels)``."""
+    chan_list = list(channels) if channels is not None else list(range(n_channels))
+    check_fits(strategy, pus, n_channels=len(chan_list))
+    shares = _channel_shares(_member_weights(strategy), len(chan_list))
     out: list[MemberResources] = []
     offsets = {"PU1x": 0, "PU2x": 0}
     chan_next = 0
     for i, m in enumerate(strategy.members):
-        pool = tuple(range(chan_next, chan_next + shares[i]))
+        pool = tuple(chan_list[chan_next:chan_next + shares[i]])
         chan_next += shares[i]
         out.append(
             MemberResources(

@@ -49,6 +49,18 @@ class System:
         self.deployment: Optional[Deployment] = None
         self.session: Optional[Session] = None
         self.history: list[tuple[str, RunReport]] = []
+        # Optional repro.faults.Watchdog: every run spawns the fault monitor
+        # so silent hangs come back as structured RunReport.faults.
+        self.watchdog = None
+
+    # -- fault injection (repro.faults) --------------------------------------
+    def inject(self, schedule) -> None:
+        """Attach a :class:`repro.faults.FaultSchedule` to the simulated
+        hardware; it re-arms on every run until :meth:`clear_faults`."""
+        self.sim.inject(schedule)
+
+    def clear_faults(self) -> None:
+        self.sim.clear_faults()
 
     # -- deployment lifecycle ------------------------------------------------
     def _check_compatible(self, deployment: Deployment) -> None:
@@ -103,6 +115,7 @@ class System:
             self.deployment.programs(rounds),
             members=self.deployment.sim_members(),
             until_cycles=until_cycles,
+            watchdog=self.watchdog,
         )
         report = RunReport.from_sim(res)
         self.history.append((self.deployment.name, report))

@@ -45,20 +45,39 @@ class Placement:
 
 
 def plan_placement(workloads, *, pus=None, n_pu1x: int = 5, n_pu2x: int = 5,
-                   prev: Optional[Any] = None,
-                   engine: str = "batched") -> Placement:
+                   prev: Optional[Any] = None, engine: str = "batched",
+                   available: Optional[Any] = None) -> Placement:
     """Place the active tenant set on the fixed machine.
 
     ``workloads`` is a non-empty list of deploy ``Workload``s (or graphs).
     ``prev`` is the ``result`` of the previous multi-tenant placement (or
     ``None``); it only accelerates — the returned placement equals the
     from-scratch one.
+
+    ``available`` is the degraded-array mask: an iterable of still-healthy
+    pids. The per-kind PU budget is capped to the healthy counts, which is
+    all the explorer needs (members bind to concrete healthy pids at
+    deploy time, via ``compile_deployment(available=...)``). A mask that
+    changes the budget inherently differs from ``prev``'s budget, so the
+    explorer's ``prev=`` reuse check rejects it and the placement takes
+    the safe from-scratch path — degraded placements are byte-equal to a
+    fresh ``explore_multi`` on the masked budget by construction.
     """
+    from ..core.pu import make_u50_system
     from ..deploy import Workload
 
     ws = tuple(Workload.of(w) for w in workloads)
     if not ws:
         raise ValueError("plan_placement needs at least one tenant workload")
+    if available is not None:
+        avail = set(available)
+        machine = pus if pus is not None else make_u50_system()
+        n_pu1x = min(n_pu1x, sum(1 for p in machine
+                                 if p.kind == "PU1x" and p.pid in avail))
+        n_pu2x = min(n_pu2x, sum(1 for p in machine
+                                 if p.kind == "PU2x" and p.pid in avail))
+        if n_pu1x + n_pu2x == 0:
+            raise ValueError("no available PUs to place tenants on")
     if len(ws) == 1:
         res = explore(ws[0], n_pu1x=n_pu1x, n_pu2x=n_pu2x, pus=pus,
                       engine=engine)

@@ -6,10 +6,11 @@
 from ..deploy import SLO, RunReport, TenantReport
 from .request import (DecodeSession, Request, ServeEvent, TenantState,
                       WindowSample)
-from .server import MAX_WINDOW, Server
+from .server import MAX_WINDOW, DrainStuckError, Server
 
 __all__ = [
     "DecodeSession",
+    "DrainStuckError",
     "MAX_WINDOW",
     "Request",
     "RunReport",

@@ -80,6 +80,7 @@ class ServeEvent:
 
     t: float
     kind: str     # join|leave|admit|retire|swap|replan|evict|slo-violation
+                  # |inject|fault|quarantine|replay|shed (fault tolerance)
     tenant: str
     detail: str = ""
 

@@ -1,0 +1,479 @@
+"""Fault-tolerant serving tests: seeded fault injection, watchdog
+detection (every fault class comes back as a structured FaultReport naming
+the exact PU / channel), and degraded-array recovery (quarantine ->
+masked re-placement byte-equal to a from-scratch exploration -> session
+replay), plus the kernel-level blocked-process diagnostics and the
+hardened Server.drain() edge cases."""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
+
+from repro.compiler import zoo
+from repro.core.events import Delay, Kernel, WaitCond
+from repro.deploy import SLO, Strategy, System, Workload, compile_deployment
+from repro.dse import explore_multi
+from repro.dse.replan import plan_placement
+from repro.faults import (
+    FaultCode,
+    FaultSchedule,
+    HBMStall,
+    LinkSpike,
+    PUHang,
+    TokenCorrupt,
+    TokenDrop,
+    Watchdog,
+    reports_from_blocked,
+)
+from repro.serve import DrainStuckError, Request, Server
+
+
+@pytest.fixture(scope="module")
+def cnn_dep():
+    return compile_deployment(zoo.tiny_cnn(), Strategy.single(2, 1))
+
+
+def _stage_pids(dep):
+    """Pipeline-ordered pids of the first member."""
+    cm = dep.members[0].compiled
+    stages = sorted(s.index for s in cm.part.stages if s.nids)
+    return [cm.pid_map[i] for i in stages]
+
+
+def _used_channel(dep):
+    """The HBM channel the deployment's DataMoves reference most — the
+    member's channel *pool* can be wider than what its memory plan uses,
+    and stalling an untouched channel is a no-op."""
+    from collections import Counter
+
+    from repro.core.isa import DataMove
+
+    c = Counter()
+    for p in dep.programs():
+        for grp in (p.ld, p.cp, p.st):
+            for inst in grp.instructions:
+                if isinstance(inst, DataMove):
+                    c[inst.channel] += 1
+    return c.most_common(1)[0][0]
+
+
+# ------------------------------------------------------- kernel diagnostics
+
+
+class TestKernelDiagnostics:
+    def test_blocked_proc_carries_cycle_and_member(self):
+        k = Kernel()
+
+        def parked():
+            yield Delay(10)
+            yield WaitCond("never-signalled", desc="stuck on nothing")
+
+        k.spawn(parked(), name="p0", member="m0")
+        k.run()
+        assert k.deadlocked()
+        (b,) = k.blocked_procs()
+        assert b.name == "p0"
+        assert b.desc == "stuck on nothing"
+        assert b.cycle == 10
+        assert b.member == "m0"
+
+    def test_daemon_excluded_from_deadlock(self):
+        k = Kernel()
+
+        def ticker():
+            while True:
+                yield Delay(5)
+
+        def worker():
+            yield Delay(12)
+
+        k.spawn(ticker(), name="tick", daemon=True)
+        k.spawn(worker(), name="work")
+        k.run()  # must terminate: the daemon alone keeps no heap alive
+        assert not k.deadlocked()
+        assert k.now >= 12
+
+    def test_halt_stops_run(self):
+        k = Kernel()
+
+        def slow():
+            yield Delay(1000)
+
+        def halter():
+            yield Delay(5)
+            k.halt()
+
+        k.spawn(slow(), name="slow")
+        k.spawn(halter(), name="halter")
+        k.run()
+        assert k.now == 5
+
+    def test_reports_from_blocked_parses_channel(self):
+        k = Kernel()
+
+        def parked():
+            yield WaitCond(("lut", 1, "REQ", (0, 7)),
+                           desc="WAIT_REQ on channel (src_pid=0, bid=7)")
+
+        k.spawn(parked(), name="pu1.LD", member="t0")
+        k.run()
+        (r,) = reports_from_blocked(k.blocked_procs())
+        assert r.code == FaultCode.DEADLOCK
+        assert r.pid == 1 and r.group == "LD"
+        assert r.channel == (0, 7)
+        assert r.member == "t0"
+        assert r.suspect_pid == 0  # the silent source, not the waiter
+
+
+# ---------------------------------------------------------------- schedules
+
+
+class TestFaultSchedule:
+    def test_random_is_seed_deterministic(self):
+        a = FaultSchedule.random(42, n=3)
+        b = FaultSchedule.random(42, n=3)
+        assert a == b
+        assert a.describe() == b.describe()
+        assert FaultSchedule.random(43, n=3) != a
+
+    def test_describe_names_every_class(self):
+        s = FaultSchedule(faults=(
+            PUHang(pid=3, at_cycle=100),
+            TokenDrop(src_pid=1),
+            TokenCorrupt(src_pid=2),
+            HBMStall(channel=4),
+            LinkSpike(src_pid=0, dst_pid=5, extra_cycles=1000),
+        ))
+        d = s.describe()
+        for tag in ("pu-hang", "token-drop", "token-corrupt", "hbm-stall",
+                    "link-spike"):
+            assert tag in d
+
+
+# ---------------------------------------------------------------- detection
+
+
+class TestDetection:
+    """Every fault class -> a structured FaultReport naming the exact
+    PU / sync channel / HBM channel, via the watchdog monitor."""
+
+    def _run(self, cnn_dep, schedule):
+        sys = System(cnn_dep.pus)
+        sys.watchdog = Watchdog()
+        sys.load(cnn_dep)
+        sys.inject(schedule)
+        return sys.run()
+
+    def test_pu_hang(self, cnn_dep):
+        pid = _stage_pids(cnn_dep)[-1]
+        rep = self._run(cnn_dep, FaultSchedule(
+            faults=(PUHang(pid=pid, at_cycle=2000.0),)))
+        assert rep.faulted and not rep.deadlocked
+        hangs = [r for r in rep.faults if r.code == FaultCode.PU_HANG]
+        assert hangs and all(r.pid == pid for r in hangs)
+        assert all(r.index is not None for r in hangs)
+
+    def test_token_drop(self, cnn_dep):
+        src = _stage_pids(cnn_dep)[0]
+        rep = self._run(cnn_dep, FaultSchedule(
+            faults=(TokenDrop(src_pid=src),)))
+        assert rep.faulted
+        sync = [r for r in rep.faults if r.code == FaultCode.SYNC_TIMEOUT]
+        assert any(r.channel is not None and r.channel[0] == src
+                   for r in sync)
+
+    def test_token_corrupt(self, cnn_dep):
+        src = _stage_pids(cnn_dep)[0]
+        rep = self._run(cnn_dep, FaultSchedule(
+            faults=(TokenCorrupt(src_pid=src),)))
+        assert rep.faulted
+        sync = [r for r in rep.faults if r.code == FaultCode.SYNC_TIMEOUT]
+        assert any(r.channel is not None and r.channel[0] == src
+                   for r in sync)
+
+    def test_hbm_stall(self, cnn_dep):
+        chan = _used_channel(cnn_dep)
+        rep = self._run(cnn_dep, FaultSchedule(
+            faults=(HBMStall(channel=chan, at_cycle=1000.0),)))
+        assert rep.faulted
+        hbm = [r for r in rep.faults if r.code == FaultCode.HBM_TIMEOUT]
+        assert hbm and all(r.hbm_channel == chan for r in hbm)
+
+    def test_link_spike(self, cnn_dep):
+        pids = _stage_pids(cnn_dep)
+        src, dst = pids[0], pids[1]
+        rep = self._run(cnn_dep, FaultSchedule(
+            faults=(LinkSpike(src_pid=src, dst_pid=dst,
+                              extra_cycles=10_000_000.0),)))
+        assert rep.faulted
+        sync = [r for r in rep.faults if r.code == FaultCode.SYNC_TIMEOUT]
+        assert any(r.channel is not None and r.channel[0] == src
+                   for r in sync)
+
+    def test_clean_run_unchanged_by_watchdog(self, cnn_dep):
+        base = System(cnn_dep.pus).load(cnn_dep).run()
+        sys = System(cnn_dep.pus)
+        sys.watchdog = Watchdog()
+        watched = sys.load(cnn_dep).run()
+        assert not watched.faulted
+        assert watched.aggregate_fps() == base.aggregate_fps()
+
+
+# --------------------------------------------------------- reset regression
+
+
+class TestResetClearsFaults:
+    def test_clear_faults_restores_clean_behavior(self, cnn_dep):
+        """A System reused after a faulted run starts clean (satellite:
+        reset() clears injected-fault state)."""
+        sys = System(cnn_dep.pus)
+        sys.watchdog = Watchdog()
+        sys.load(cnn_dep)
+        clean = sys.run()
+        pid = _stage_pids(cnn_dep)[-1]
+        sys.inject(FaultSchedule(faults=(PUHang(pid=pid, at_cycle=2000.0),)))
+        faulted = sys.run()
+        assert faulted.faulted
+        sys.clear_faults()
+        again = sys.run()
+        assert not again.faulted
+        assert again.aggregate_fps() == clean.aggregate_fps()
+        assert sys.sim.isu.fault_hook is None
+        assert all(icu.hang_at is None for icu in sys.sim.icus.values())
+
+    def test_schedule_rearms_identically_every_run(self, cnn_dep):
+        sys = System(cnn_dep.pus)
+        sys.watchdog = Watchdog()
+        sys.load(cnn_dep)
+        pid = _stage_pids(cnn_dep)[0]
+        sys.inject(FaultSchedule(faults=(PUHang(pid=pid, at_cycle=3000.0),)))
+        a = sys.run()
+        b = sys.run()  # frozen schedule re-arms on reset: byte-equal
+        assert [str(r) for r in a.faults] == [str(r) for r in b.faults]
+
+
+# --------------------------------------------------------- masked placement
+
+
+class TestMaskedPlacement:
+    def test_masked_compile_avoids_quarantined_resources(self, cnn_dep):
+        avail = [p.pid for p in cnn_dep.pus][1:]  # quarantine pid 0
+        chans = list(range(4, 32))                # channels 0-3 dead
+        dep = compile_deployment(
+            zoo.tiny_cnn(), Strategy.single(2, 1), pus=cnn_dep.pus,
+            available=avail, channels=chans)
+        m = dep.members[0]
+        assert set(m.pids) <= set(avail)
+        assert set(m.channels) <= set(chans)
+        # The machine itself is unchanged: still loadable into the full
+        # System (quarantined units simply receive no programs).
+        assert dep.pus == cnn_dep.pus
+        rep = System(cnn_dep.pus).load(dep).run()
+        assert not rep.deadlocked
+
+    def test_all_masked_raises(self, cnn_dep):
+        with pytest.raises(ValueError, match="no available PUs"):
+            compile_deployment(zoo.tiny_cnn(), Strategy.single(2, 1),
+                               pus=cnn_dep.pus, available=[])
+
+    def test_whole_kind_masked_raises(self, cnn_dep):
+        only_1x = [p.pid for p in cnn_dep.pus if p.kind == "PU1x"]
+        with pytest.raises(ValueError, match="PU2x"):
+            compile_deployment(zoo.tiny_cnn(), Strategy.single(2, 1),
+                               pus=cnn_dep.pus, available=only_1x)
+
+    def test_degraded_placement_equals_from_scratch(self, cnn_dep):
+        """The acceptance property: a masked re-plan (threaded with the
+        *unmasked* prev result) is byte-equal to a fresh explore_multi on
+        the masked budget — the changed budget forces the safe
+        from-scratch path."""
+        ws = [Workload(zoo.tiny_cnn(), "a"),
+              Workload(zoo.linear_chain(3), "b")]
+        full = plan_placement(ws, pus=cnn_dep.pus)
+        kinds = {p.pid: p.kind for p in cnn_dep.pus}
+        dead = {_stage_pids(cnn_dep)[0]}
+        avail = [p.pid for p in cnn_dep.pus if p.pid not in dead]
+        n1 = sum(1 for pid in avail if kinds[pid] == "PU1x")
+        n2 = sum(1 for pid in avail if kinds[pid] == "PU2x")
+        masked = plan_placement(ws, pus=cnn_dep.pus, prev=full.result,
+                                available=avail)
+        fresh = explore_multi(ws, n_pu1x=n1, n_pu2x=n2, pus=cnn_dep.pus)
+        assert masked.point == fresh.balanced
+        assert masked.configs == fresh.balanced.configs
+
+    def test_no_healthy_pus_raises(self, cnn_dep):
+        with pytest.raises(ValueError, match="no available PUs"):
+            plan_placement([Workload(zoo.tiny_cnn(), "a")],
+                           pus=cnn_dep.pus, available=[])
+
+
+# ---------------------------------------------------------- server recovery
+
+
+def _serve_one_window():
+    """A server with one tenant and two requests, stepped through its
+    first clean window so the placement (and target pids) are known."""
+    srv = Server(verify=False)
+    srv.join("t", depth=1, max_slots=2, window=4)
+    srv.submit(Request(tenant="t", prompt_tokens=8, max_new_tokens=8))
+    srv.submit(Request(tenant="t", prompt_tokens=4, max_new_tokens=8))
+    assert srv.step()
+    return srv
+
+
+def _schedule_for(klass, dep):
+    pids = _stage_pids(dep)
+    if klass == "pu-hang":
+        return FaultSchedule(faults=(PUHang(pid=pids[-1], at_cycle=2000.0),))
+    if klass == "token-drop":
+        return FaultSchedule(faults=(TokenDrop(src_pid=pids[0]),))
+    if klass == "token-corrupt":
+        return FaultSchedule(faults=(TokenCorrupt(src_pid=pids[0]),))
+    if klass == "hbm-stall":
+        return FaultSchedule(
+            faults=(HBMStall(channel=_used_channel(dep), at_cycle=1000.0),))
+    if klass == "link-spike":
+        return FaultSchedule(faults=(
+            LinkSpike(src_pid=pids[0], dst_pid=pids[1],
+                      extra_cycles=10_000_000.0),))
+    raise ValueError(klass)
+
+
+class TestServerRecovery:
+    @pytest.mark.parametrize("klass", ["pu-hang", "token-drop",
+                                       "token-corrupt", "hbm-stall",
+                                       "link-spike"])
+    def test_detect_quarantine_replay_complete(self, klass):
+        srv = _serve_one_window()
+        srv.inject(_schedule_for(klass, srv.system.deployment))
+        srv.drain()
+        # detected:
+        assert srv.faults
+        assert any(e.kind == "fault" for e in srv.events)
+        # quarantined + replayed:
+        assert srv.quarantined or srv.dead_channels
+        assert any(e.kind == "quarantine" for e in srv.events)
+        assert any(e.kind == "replay" for e in srv.events)
+        # recovered: every request completes on the degraded array.
+        assert all(r.completed for r in srv.requests)
+        assert not any(r.evicted for r in srv.requests)
+
+    def test_hbm_stall_quarantines_the_channel(self):
+        srv = _serve_one_window()
+        chan = _used_channel(srv.system.deployment)
+        srv.inject(FaultSchedule(
+            faults=(HBMStall(channel=chan, at_cycle=1000.0),)))
+        srv.drain()
+        assert chan in srv.dead_channels
+        # the degraded window really avoids the dead channel
+        assert chan not in srv.system.deployment.members[0].channels
+        assert all(r.completed for r in srv.requests)
+
+    def test_deadlock_surfaces_as_typed_events(self):
+        """With detection explicitly disabled the drained event heap is
+        the (slower) detector; the deadlock still becomes typed events
+        and the loop still recovers — nothing escapes drain()."""
+        srv = _serve_one_window()
+        pid = _stage_pids(srv.system.deployment)[-1]
+        srv.inject(FaultSchedule(faults=(PUHang(pid=pid, at_cycle=2000.0),)),
+                   watchdog=None)
+        srv.drain()
+        assert any(e.kind == "fault" and "fault-deadlock" in e.detail
+                   for e in srv.events)
+        assert srv.quarantined
+        assert all(r.completed or r.evicted for r in srv.requests)
+
+    def test_shed_when_array_exhausted(self):
+        srv = Server(verify=False)
+        srv.join("hi", depth=1, max_slots=1, window=4, slo=SLO(priority=2))
+        srv.join("lo", depth=1, max_slots=1, window=4)
+        srv.submit(Request(tenant="hi", prompt_tokens=4, max_new_tokens=4))
+        srv.submit(Request(tenant="lo", prompt_tokens=4, max_new_tokens=4))
+        srv.quarantined = {p.pid for p in srv.system.pus}  # total loss
+        report = srv.drain()
+        assert all(r.evicted for r in srv.requests)
+        shed = [e for e in srv.events if e.kind == "shed"]
+        assert len(shed) == 2
+        assert shed[0].tenant == "lo"  # lowest priority loses service first
+        assert report.tenants
+
+
+class TestDrainHardening:
+    def test_drain_empty_server(self):
+        rep = Server(verify=False).drain()
+        assert rep.tenants == {}
+        assert rep.wall_s == 0.0
+
+    def test_drain_tenant_without_requests(self):
+        srv = Server(verify=False)
+        srv.join("t", depth=1, max_slots=1, window=4)
+        rep = srv.drain()
+        assert rep.tenants["t"].tokens == 0
+
+    def test_drain_stuck_names_tenants(self):
+        srv = Server(verify=False)
+        srv.join("t", depth=1, max_slots=1, window=2)
+        srv.submit(Request(tenant="t", prompt_tokens=4, max_new_tokens=64))
+        with pytest.raises(DrainStuckError) as ei:
+            srv.drain(max_windows=3)
+        assert ei.value.stuck == ("t",)
+        assert "t" in str(ei.value)
+        assert ei.value.max_windows == 3
+
+
+# ------------------------------------------------------- chaos determinism
+
+
+CHAOS_SEED = 1001  # pu-hang on a placed pid: detect -> quarantine -> replay
+
+
+def _chaos_run(seed):
+    srv = Server(verify=False)
+    srv.join("a", depth=1, max_slots=2, window=4)
+    srv.join("b", depth=1, max_slots=1, window=4)
+    for i in range(3):
+        srv.submit(Request(tenant="a", prompt_tokens=4 + i,
+                           max_new_tokens=8))
+    srv.submit(Request(tenant="b", prompt_tokens=6, max_new_tokens=8))
+    srv.inject(FaultSchedule.random(seed, n=1))
+    report = srv.drain()
+    return ([str(e) for e in srv.events], str(report),
+            sorted(srv.quarantined), sorted(srv.dead_channels))
+
+
+class TestChaosDeterminism:
+    def test_same_seed_same_everything(self):
+        """Satellite: same seed => byte-equal event log and RunReport
+        across two independent serving runs."""
+        a = _chaos_run(CHAOS_SEED)
+        b = _chaos_run(CHAOS_SEED)
+        assert a[0] == b[0]   # full event log, byte-equal
+        assert a[1] == b[1]   # aggregate report
+        assert a[2] == b[2] and a[3] == b[3]
+
+    @pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                        reason="hypothesis not installed")
+    def test_any_seed_detection_is_deterministic(self, cnn_dep):
+        if not HAVE_HYPOTHESIS:  # pragma: no cover
+            return
+
+        @given(seed=st.integers(0, 2**16))
+        @settings(max_examples=6, deadline=None)
+        def prop(seed):
+            sched = FaultSchedule.random(seed, n=2, pus=cnn_dep.pus)
+            outs = []
+            for _ in range(2):
+                sys = System(cnn_dep.pus)
+                sys.watchdog = Watchdog()
+                sys.load(cnn_dep)
+                sys.inject(sched)
+                rep = sys.run()
+                outs.append(([str(r) for r in rep.faults],
+                             rep.aggregate_fps()))
+            assert outs[0] == outs[1]
+
+        prop()

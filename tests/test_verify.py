@@ -131,7 +131,7 @@ class TestMutationDefects:
         assert res.deadlocked
         blocked = sim.kernel.blocked_procs()
         assert blocked
-        assert any("channel (src_pid=" in desc for _, desc in blocked)
+        assert any("channel (src_pid=" in b.desc for b in blocked)
 
     def test_swap_bids(self, cnn_dep):
         programs, mem, specs = _bundle(cnn_dep)
@@ -258,8 +258,9 @@ class TestDeadlockDiagnostics:
         with pytest.raises(DeadlockError) as ei:
             k.run(max_events=50)
         err = ei.value
-        assert ("pu0.ST.icu", "WAIT_ACK on channel (src_pid=1, bid=5)") \
-            in err.blocked
+        assert any(b.name == "pu0.ST.icu"
+                   and b.desc == "WAIT_ACK on channel (src_pid=1, bid=5)"
+                   for b in err.blocked)
         assert "pu0.ST.icu" in str(err)
         assert "(src_pid=1, bid=5)" in str(err)
 
